@@ -1,0 +1,78 @@
+"""Benchmark orchestrator — one section per paper table/figure + the
+assignment's roofline report.  Prints ``table,name,value,note`` CSV rows
+and wall time per section.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fa,vr,vj,nn,bssa,roofline]
+"""
+
+import argparse
+import time
+
+
+SECTIONS = {}
+
+
+def section(name):
+    def deco(fn):
+        SECTIONS[name] = fn
+        return fn
+    return deco
+
+
+@section("fa")
+def _fa():
+    from benchmarks import fa_system
+    return fa_system.rows()
+
+
+@section("vr")
+def _vr():
+    from benchmarks import vr_system
+    return vr_system.rows()
+
+
+@section("vj")
+def _vj():
+    from benchmarks import vj_tradeoffs
+    return vj_tradeoffs.rows()
+
+
+@section("nn")
+def _nn():
+    from benchmarks import face_nn_tradeoffs
+    return face_nn_tradeoffs.rows()
+
+
+@section("bssa")
+def _bssa():
+    from benchmarks import bssa_quality
+    return bssa_quality.rows()
+
+
+@section("roofline")
+def _roofline():
+    from benchmarks import roofline
+    roofline.main()
+    return [("roofline", "table", "printed above", "see EXPERIMENTS.md")]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="all")
+    args = ap.parse_args()
+    names = list(SECTIONS) if args.only == "all" else args.only.split(",")
+    for name in names:
+        t0 = time.time()
+        print(f"\n===== {name} =====")
+        try:
+            rows = SECTIONS[name]()
+            for row in rows:
+                print(",".join(str(c) for c in row))
+        except Exception as e:  # noqa: BLE001 — report and continue
+            print(f"{name},ERROR,{type(e).__name__},{e}")
+            raise
+        print(f"# {name}: {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,218 @@
+"""Bilateral-space stereo (BSSA) — paper §IV-A/B, after Barron et al. [4].
+
+Pipeline per camera pair (Fig. 10/12):
+
+1. **Rough disparity** — block matching over a disparity range (the "rough
+   disparity" of global stereo pipelines).
+2. **Bilateral grid construction (splat)** — pixels map to grid vertices
+   (y/s_y, x/s_x, intensity/s_r): the paper's B3 output, the biggest
+   intermediate (Fig. 13).
+3. **Bilateral-space refinement** — the FPGA-accelerated block: iterated
+   [1,2,1] blurs of the disparity-weighted grid ("applying millions of
+   blurs ... most of these filters can run in parallel"), which in
+   bilateral space equals a global edge-aware smoothing in pixel space.
+   f32 throughout — the paper found >=32-bit float necessary for quality.
+4. **Slice** — sample the refined grid back at pixel coordinates.
+
+The blur kernel is the perf-critical unit: kernels/bilateral_blur holds
+the Pallas TPU version; this module is the jnp oracle and the quality
+harness (MS-SSIM vs grid size, Fig. 11b).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Rough disparity (block matching)
+# ---------------------------------------------------------------------------
+
+
+def rough_disparity(left: jax.Array, right: jax.Array, max_disp: int = 16,
+                    patch: int = 5) -> jax.Array:
+    """Winner-take-all SAD block matching.  (h, w) f32 -> (h, w) f32."""
+    h, w = left.shape
+    pad = patch // 2
+    lp = jnp.pad(left, pad, mode="edge")
+    costs = []
+    for d in range(max_disp + 1):
+        rs = jnp.roll(right, d, axis=1)
+        rs = rs.at[:, :d].set(right[:, :1] if d else rs[:, :d])
+        diff = jnp.abs(left - rs)
+        dp = jnp.pad(diff, pad, mode="edge")
+        # box filter via cumsum (integral image trick — same unit as VJ!)
+        ii = jnp.cumsum(jnp.cumsum(dp, axis=0), axis=1)
+        ii = jnp.pad(ii, ((1, 0), (1, 0)))
+        sad = (ii[patch:, patch:] - ii[:-patch, patch:]
+               - ii[patch:, :-patch] + ii[:-patch, :-patch])
+        costs.append(sad[:h, :w])
+    cost = jnp.stack(costs)                      # (D+1, h, w)
+    return jnp.argmin(cost, axis=0).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Bilateral grid
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class GridSpec:
+    sigma_spatial: int          # pixels per grid vertex (paper sweeps 4..64)
+    sigma_range: float = 16.0   # intensity bins (on [0,255] scale)
+
+    def dims(self, h: int, w: int):
+        gy = int(np.ceil(h / self.sigma_spatial)) + 1
+        gx = int(np.ceil(w / self.sigma_spatial)) + 1
+        gr = int(np.ceil(256.0 / self.sigma_range)) + 1
+        return gy, gx, gr
+
+
+def _grid_coords(img: jax.Array, spec: GridSpec):
+    h, w = img.shape
+    yy, xx = jnp.mgrid[0:h, 0:w]
+    gy = yy / spec.sigma_spatial
+    gx = xx / spec.sigma_spatial
+    gr = img * 255.0 / spec.sigma_range
+    return gy.reshape(-1), gx.reshape(-1), gr.reshape(-1)
+
+
+def splat(img: jax.Array, values: jax.Array, spec: GridSpec):
+    """Accumulate (value, weight) into the bilateral grid (nearest vertex).
+
+    Returns (grid_val, grid_wt) of shape (gy, gx, gr).  Nearest-vertex
+    splatting matches the hardware design (the FPGA streams vertices, not
+    8-corner trilinear updates); slicing interpolates instead.
+    """
+    h, w = img.shape
+    gy, gx, gr = spec.dims(h, w)
+    cy, cx, cr = _grid_coords(img, spec)
+    iy = jnp.clip(jnp.round(cy).astype(jnp.int32), 0, gy - 1)
+    ix = jnp.clip(jnp.round(cx).astype(jnp.int32), 0, gx - 1)
+    ir = jnp.clip(jnp.round(cr).astype(jnp.int32), 0, gr - 1)
+    flat = (iy * gx + ix) * gr + ir
+    v = jnp.zeros((gy * gx * gr,), jnp.float32).at[flat].add(values.reshape(-1))
+    wt = jnp.zeros((gy * gx * gr,), jnp.float32).at[flat].add(1.0)
+    return v.reshape(gy, gx, gr), wt.reshape(gy, gx, gr)
+
+
+def blur_121(grid: jax.Array) -> jax.Array:
+    """Separable [1,2,1]/4 blur over the three grid dimensions.
+
+    This is the compute unit the paper maps to FPGA DSPs; the Pallas TPU
+    version lives in kernels/bilateral_blur (same semantics, tested
+    allclose against this oracle).
+    """
+    def blur_axis(g, axis):
+        lo = jnp.roll(g, 1, axis)
+        hi = jnp.roll(g, -1, axis)
+        # replicate edges (roll wraps; overwrite the wrapped slices)
+        idx_lo = [slice(None)] * g.ndim
+        idx_lo[axis] = slice(0, 1)
+        idx_hi = [slice(None)] * g.ndim
+        idx_hi[axis] = slice(-1, None)
+        lo = lo.at[tuple(idx_lo)].set(g[tuple(idx_lo)])
+        hi = hi.at[tuple(idx_hi)].set(g[tuple(idx_hi)])
+        return 0.25 * lo + 0.5 * g + 0.25 * hi
+
+    for ax in range(3):
+        grid = blur_axis(grid, ax)
+    return grid
+
+
+def refine(grid_val: jax.Array, grid_wt: jax.Array, n_iters: int = 8):
+    """Iterated bilateral-space smoothing of the disparity field.
+
+    Normalized blur: both value and weight grids are blurred each
+    iteration; the ratio is the edge-aware smoothed disparity ("simple
+    local filters are equivalent to costly global edge-aware filters").
+    """
+    def body(carry, _):
+        v, w = carry
+        return (blur_121(v), blur_121(w)), None
+
+    (v, w), _ = jax.lax.scan(body, (grid_val, grid_wt), None, length=n_iters)
+    return v, w
+
+
+def slice_grid(grid_val: jax.Array, grid_wt: jax.Array, img: jax.Array,
+               spec: GridSpec) -> jax.Array:
+    """Trilinear sampling of the refined grid at each pixel's coordinates."""
+    h, w = img.shape
+    gy, gx, gr = grid_val.shape
+    cy, cx, cr = _grid_coords(img, spec)
+
+    y0 = jnp.clip(jnp.floor(cy).astype(jnp.int32), 0, gy - 2)
+    x0 = jnp.clip(jnp.floor(cx).astype(jnp.int32), 0, gx - 2)
+    r0 = jnp.clip(jnp.floor(cr).astype(jnp.int32), 0, gr - 2)
+    fy, fx, fr = cy - y0, cx - x0, cr - r0
+    fy = jnp.clip(fy, 0, 1)
+    fx = jnp.clip(fx, 0, 1)
+    fr = jnp.clip(fr, 0, 1)
+
+    def at(dy, dx, dr):
+        flat = ((y0 + dy) * gx + (x0 + dx)) * gr + (r0 + dr)
+        return grid_val.reshape(-1)[flat], grid_wt.reshape(-1)[flat]
+
+    num = jnp.zeros_like(cy)
+    den = jnp.zeros_like(cy)
+    for dy in (0, 1):
+        for dx in (0, 1):
+            for dr in (0, 1):
+                wv = (jnp.where(dy, fy, 1 - fy)
+                      * jnp.where(dx, fx, 1 - fx)
+                      * jnp.where(dr, fr, 1 - fr))
+                v, wt = at(dy, dx, dr)
+                num += wv * v
+                den += wv * wt
+    out = num / jnp.maximum(den, 1e-6)
+    return out.reshape(h, w)
+
+
+def bssa_depth(left: jax.Array, right: jax.Array, spec: GridSpec,
+               max_disp: int = 16, n_iters: int = 8):
+    """Full BSSA: rough disparity -> splat -> refine -> slice."""
+    rough = rough_disparity(left, right, max_disp)
+    gv, gw = splat(left, rough, spec)
+    gv, gw = refine(gv, gw, n_iters)
+    return slice_grid(gv, gw, left, spec)
+
+
+# ---------------------------------------------------------------------------
+# MS-SSIM (paper's quality metric, Fig. 11b) — [42]
+# ---------------------------------------------------------------------------
+
+
+def _ssim(a: jax.Array, b: jax.Array, win: int = 8):
+    """Mean SSIM with box windows (adequate for relative comparisons)."""
+    def box(x):
+        ii = jnp.cumsum(jnp.cumsum(x, 0), 1)
+        ii = jnp.pad(ii, ((1, 0), (1, 0)))
+        s = (ii[win:, win:] - ii[:-win, win:] - ii[win:, :-win]
+             + ii[:-win, :-win])
+        return s / (win * win)
+
+    c1, c2 = 0.01 ** 2, 0.03 ** 2
+    mu_a, mu_b = box(a), box(b)
+    va = box(a * a) - mu_a ** 2
+    vb = box(b * b) - mu_b ** 2
+    cov = box(a * b) - mu_a * mu_b
+    ssim = ((2 * mu_a * mu_b + c1) * (2 * cov + c2)) / (
+        (mu_a ** 2 + mu_b ** 2 + c1) * (va + vb + c2))
+    return jnp.mean(ssim)
+
+
+def ms_ssim(a: jax.Array, b: jax.Array, levels: int = 3) -> float:
+    """Multi-scale SSIM: geometric mean of SSIM over dyadic downsamples."""
+    total = 1.0
+    for _ in range(levels):
+        total = total * jnp.clip(_ssim(a, b), 1e-4, 1.0) ** (1.0 / levels)
+        h, w = a.shape
+        a = a[: h // 2 * 2, : w // 2 * 2].reshape(h // 2, 2, w // 2, 2).mean((1, 3))
+        b = b[: h // 2 * 2, : w // 2 * 2].reshape(h // 2, 2, w // 2, 2).mean((1, 3))
+    return float(total)

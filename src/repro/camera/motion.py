@@ -1,0 +1,38 @@
+"""Motion detection — the pipeline's first optional data-reduction block.
+
+Paper §II-A: "an optional motion detection block can reduce the bandwidth
+and ensuing power consumption of core blocks."  The WISPCam-class
+implementation is a frame-difference comparator; we reproduce exactly
+that: mean absolute difference against the previous frame, thresholded,
+optionally on a downsampled grid (the ASIC's analog comparator operates on
+a coarse pixel grid to stay in the uW range).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def downsample(frame: jax.Array, factor: int = 8) -> jax.Array:
+    h, w = frame.shape[-2:]
+    h2, w2 = h // factor * factor, w // factor * factor
+    f = frame[..., :h2, :w2]
+    f = f.reshape(*f.shape[:-2], h2 // factor, factor, w2 // factor, factor)
+    return jnp.mean(f, axis=(-3, -1))
+
+
+def motion_score(prev: jax.Array, cur: jax.Array, factor: int = 8) -> jax.Array:
+    """Mean |Δ| on a coarse grid; scalar per frame (batched over leading dims)."""
+    dp = downsample(prev, factor)
+    dc = downsample(cur, factor)
+    return jnp.mean(jnp.abs(dc - dp), axis=(-2, -1))
+
+
+def motion_mask(frames: jax.Array, threshold: float = 0.01, factor: int = 8):
+    """frames: (n, h, w).  Returns (n,) bool — frame passed motion detection.
+    Frame 0 never passes (no reference), matching a cold-start sensor."""
+    prev = frames[:-1]
+    cur = frames[1:]
+    scores = motion_score(prev, cur, factor)
+    return jnp.concatenate([jnp.zeros((1,), bool), scores > threshold]), scores

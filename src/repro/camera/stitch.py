@@ -1,0 +1,75 @@
+"""Panorama composition (paper Fig. 10 B5): project + feather-blend.
+
+The stitch block is computationally marginal next to BSSA (§IV-C: "The
+computation cost of image stitching is marginal compared to BSSA") but its
+*output size* is what makes offload feasible — it is the pipeline's last
+data-reduction step.  We implement a cylindrical-projection stitcher with
+feathered blending over camera seams, enough to measure the real
+bytes-in/bytes-out the cost model uses.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def cylindrical_warp(img: jax.Array, f: float) -> jax.Array:
+    """Project an (h, w) image onto a cylinder of focal length f (pixels)."""
+    h, w = img.shape
+    yc, xc = (h - 1) / 2.0, (w - 1) / 2.0
+    ys, xs = jnp.mgrid[0:h, 0:w]
+    theta = (xs - xc) / f
+    hh = (ys - yc) / f
+    x_src = f * jnp.tan(theta) + xc
+    y_src = hh * f / jnp.cos(theta) + yc
+    x0 = jnp.clip(x_src.astype(jnp.int32), 0, w - 1)
+    y0 = jnp.clip(y_src.astype(jnp.int32), 0, h - 1)
+    valid = (x_src >= 0) & (x_src < w) & (y_src >= 0) & (y_src < h)
+    return jnp.where(valid, img[y0, x0], 0.0)
+
+
+def feather_blend(tiles, overlap: int):
+    """Blend horizontally-adjacent warped tiles with linear feathering.
+
+    tiles: list of (h, w) arrays; adjacent tiles share ``overlap`` columns.
+    """
+    h, w = tiles[0].shape
+    step = w - overlap
+    total_w = step * (len(tiles) - 1) + w
+    canvas = jnp.zeros((h, total_w))
+    weight = jnp.zeros((h, total_w))
+    ramp = jnp.concatenate([
+        jnp.linspace(0, 1, overlap),
+        jnp.ones(w - 2 * overlap),
+        jnp.linspace(1, 0, overlap),
+    ])
+    for i, tile in enumerate(tiles):
+        x0 = i * step
+        canvas = canvas.at[:, x0:x0 + w].add(tile * ramp)
+        weight = weight.at[:, x0:x0 + w].add(ramp)
+    return canvas / jnp.maximum(weight, 1e-6)
+
+
+def stitch_ring(views, focal: float = None, overlap_frac: float = 0.15):
+    """Stitch a ring of camera views into a panorama strip."""
+    h, w = views[0].shape
+    f = focal or 0.8 * w
+    warped = [cylindrical_warp(jnp.asarray(v), f) for v in views]
+    overlap = int(w * overlap_frac)
+    return feather_blend(warped, overlap)
+
+
+def stereo_panorama(left_views, right_views, depths, ipd_px: float = 6.0):
+    """Assemble the stereo pair: right-eye views are re-projected by a
+    disparity proportional to inverse depth (view synthesis lite)."""
+    left_pano = stitch_ring(left_views)
+    shifted = []
+    for v, d in zip(right_views, depths):
+        dmax = float(jnp.maximum(jnp.max(d), 1e-6))
+        shift = (ipd_px * (d / dmax)).astype(jnp.int32)
+        xs = jnp.clip(jnp.arange(v.shape[1])[None, :] - shift, 0, v.shape[1] - 1)
+        shifted.append(jnp.take_along_axis(jnp.asarray(v), xs, axis=1))
+    right_pano = stitch_ring(shifted)
+    return left_pano, right_pano

@@ -1,0 +1,122 @@
+"""Fault-tolerant checkpointing: sharded, atomic, elastic.
+
+Designed for the 1000+-node regime (assignment: checkpoint/restart, node
+failures, elastic scaling), validated at CPU scale:
+
+* **Sharded save**: every host writes only the leaves (or leaf shards) it
+  owns; here (single-host CPU) that degenerates to one writer but the
+  layout — one ``.npy`` per leaf + a JSON manifest — is the multi-writer
+  layout.
+* **Atomic**: writes go to ``step_N.tmp/`` and are renamed into place after
+  the manifest is fsynced; a crash mid-save never corrupts the latest
+  checkpoint (restore scans for the newest *complete* manifest).
+* **Elastic restore**: leaves are restored by *logical path*, then
+  device_put with the *current* mesh's shardings — a checkpoint written on
+  a 16x16 mesh restores onto 2x16x16 (or a degraded 15x16 replacement
+  mesh) without conversion, because nothing mesh-specific is persisted.
+* **Failure recovery loop**: repro.train.loop catches step failures,
+  restores the latest checkpoint and continues — tests inject failures.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import time
+
+import numpy as np
+import jax
+
+
+def _leaf_paths(tree):
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in leaves:
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        out.append((name, leaf))
+    return out
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree, extra: dict | None = None) -> str:
+    """Atomically persist a pytree.  Returns the final directory path."""
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+
+    manifest = {"step": step, "leaves": [], "extra": extra or {},
+                "time": time.time()}
+    for name, leaf in _leaf_paths(tree):
+        arr = np.asarray(jax.device_get(leaf))
+        fname = name.replace("/", "__") + ".npy"
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["leaves"].append(
+            {"name": name, "file": fname, "shape": list(arr.shape),
+             "dtype": str(arr.dtype)})
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    """Newest step with a complete manifest (ignores torn .tmp saves)."""
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for d in os.listdir(ckpt_dir):
+        if d.startswith("step_") and not d.endswith(".tmp"):
+            manifest = os.path.join(ckpt_dir, d, "manifest.json")
+            if os.path.exists(manifest):
+                steps.append(int(d[5:]))
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, step: int, like_tree, shardings=None):
+    """Restore into the structure of ``like_tree``.
+
+    ``shardings``: optional matching pytree of NamedShardings for the
+    *current* mesh — this is the elastic-rescale path (leaves are re-placed
+    shard-by-shard on whatever mesh is alive now).
+    """
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    by_name = {l["name"]: l for l in manifest["leaves"]}
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like_tree)
+    shard_flat = None
+    if shardings is not None:
+        shard_flat = jax.tree_util.tree_flatten(shardings,
+                                                is_leaf=lambda x: hasattr(x, "spec"))[0]
+    out = []
+    for i, (path, leaf) in enumerate(flat):
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        if name not in by_name:
+            raise KeyError(f"checkpoint missing leaf {name}")
+        arr = np.load(os.path.join(d, by_name[name]["file"]))
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape drift for {name}: ckpt {arr.shape} vs model {leaf.shape}")
+        if shard_flat is not None:
+            out.append(jax.device_put(arr, shard_flat[i]))
+        else:
+            out.append(jax.device_put(arr.astype(leaf.dtype)))
+    return jax.tree_util.tree_unflatten(treedef, out), manifest["extra"]
+
+
+def prune_old(ckpt_dir: str, keep: int = 3):
+    if not os.path.isdir(ckpt_dir):
+        return
+    steps = sorted(
+        int(d[5:]) for d in os.listdir(ckpt_dir)
+        if d.startswith("step_") and not d.endswith(".tmp")
+        and os.path.exists(os.path.join(ckpt_dir, d, "manifest.json"))
+    )
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"), ignore_errors=True)

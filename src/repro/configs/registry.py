@@ -1,0 +1,115 @@
+"""Arch registry: ``--arch <id>`` resolution + input_specs for every cell.
+
+``input_specs(cfg, shape, ctx)`` returns weak-type-correct
+ShapeDtypeStructs for every model input of the (arch x shape) cell — no
+device allocation, the dry-run pattern.  Modality frontends are stubs per
+the assignment: whisper gets precomputed frame embeddings; chameleon gets
+token ids that already include VQ image-token codes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import lm_archs as A
+from repro.configs.shapes import SHAPES, ShapeSpec, applicable
+from repro.models.transformer import Model, ModelConfig
+
+CONFIGS = {
+    "mixtral-8x22b": A.MIXTRAL_8X22B,
+    "deepseek-v2-236b": A.DEEPSEEK_V2,
+    "granite-34b": A.GRANITE_34B,
+    "yi-9b": A.YI_9B,
+    "codeqwen1.5-7b": A.CODEQWEN_7B,
+    "phi3-medium-14b": A.PHI3_MEDIUM,
+    "rwkv6-7b": A.RWKV6_7B,
+    "whisper-medium": A.WHISPER_MEDIUM,
+    "chameleon-34b": A.CHAMELEON_34B,
+    "jamba-v0.1-52b": A.JAMBA_52B,
+}
+
+SMOKE_CONFIGS = {
+    "mixtral-8x22b": A.MIXTRAL_SMOKE,
+    "deepseek-v2-236b": A.DEEPSEEK_SMOKE,
+    "granite-34b": A.GRANITE_SMOKE,
+    "yi-9b": A.YI_SMOKE,
+    "codeqwen1.5-7b": A.CODEQWEN_SMOKE,
+    "phi3-medium-14b": A.PHI3_SMOKE,
+    "rwkv6-7b": A.RWKV6_SMOKE,
+    "whisper-medium": A.WHISPER_SMOKE,
+    "chameleon-34b": A.CHAMELEON_SMOKE,
+    "jamba-v0.1-52b": A.JAMBA_SMOKE,
+}
+
+
+def get_config(arch: str, smoke: bool = False) -> ModelConfig:
+    table = SMOKE_CONFIGS if smoke else CONFIGS
+    if arch not in table:
+        raise KeyError(f"unknown arch {arch!r}; have {sorted(table)}")
+    return table[arch]
+
+
+def list_archs():
+    return sorted(CONFIGS)
+
+
+def _sds(shape, dtype, ctx=None, axes=None):
+    if ctx is None or axes is None:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return jax.ShapeDtypeStruct(
+        shape, dtype, sharding=ctx.named_sharding(axes, shape))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec, ctx=None) -> dict:
+    """Model-input stand-ins for one (arch x shape) cell.
+
+    train/prefill: {"tokens": (B, S) i32, ["enc_input": (B, enc_seq, D)]}
+    decode:        {"token": (B, 1) i32, "position": scalar i32,
+                    "cache": <per-arch cache tree>, ["enc_out" via cross cache]}
+    """
+    runs, why = applicable(cfg, shape)
+    if not runs:
+        raise ValueError(f"{cfg.name} x {shape.name} skipped: {why}")
+    B, S = shape.batch, shape.seq
+    out = {}
+    if shape.mode in ("train", "prefill"):
+        out["tokens"] = _sds((B, S), jnp.int32, ctx, ("batch", "seq"))
+        if cfg.is_encdec:
+            out["enc_input"] = _sds((B, cfg.enc_seq, cfg.d_model), jnp.bfloat16,
+                                    ctx, ("batch", None, "embed_act"))
+        return out
+
+    # decode: one new token against a populated length-S cache/state
+    model = Model(cfg)
+    out["token"] = _sds((B, 1), jnp.int32, ctx, ("batch", "seq"))
+    out["position"] = jax.ShapeDtypeStruct((), jnp.int32)
+    cache_shapes = jax.eval_shape(lambda: model.init_cache(B, S))
+    if ctx is None:
+        out["cache"] = cache_shapes
+    else:
+        out["cache"] = _attach_tree(cache_shapes, model.cache_axes(), ctx)
+    return out
+
+
+def _attach_tree(shapes_tree, axes_tree, ctx):
+    is_ax_leaf = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+    flat_s, treedef = jax.tree_util.tree_flatten(shapes_tree)
+    flat_a = jax.tree_util.tree_flatten(axes_tree, is_leaf=is_ax_leaf)[0]
+    assert len(flat_s) == len(flat_a), (len(flat_s), len(flat_a))
+    out = [
+        jax.ShapeDtypeStruct(s.shape, s.dtype,
+                             sharding=ctx.named_sharding(a, s.shape))
+        for s, a in zip(flat_s, flat_a)
+    ]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def all_cells():
+    """Yield every (arch, shape, runs, skip_reason) of the 40-cell table."""
+    for arch in list_archs():
+        cfg = CONFIGS[arch]
+        for sname, sh in SHAPES.items():
+            runs, why = applicable(cfg, sh)
+            yield arch, sname, runs, why

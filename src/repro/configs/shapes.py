@@ -1,0 +1,36 @@
+"""Assigned input-shape sets (assignment: 4 shapes x 10 archs = 40 cells).
+
+``decode_*`` / ``long_*`` lower ``serve_step`` (one new token against a
+seq_len KV cache/state), NOT ``train_step``.  ``long_500k`` requires
+sub-quadratic attention — pure full-attention archs skip it (recorded, not
+silently dropped).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq: int
+    batch: int
+    mode: str            # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+def applicable(cfg, shape: ShapeSpec) -> tuple:
+    """(runs: bool, reason-if-skipped).  Encoder-only archs would skip decode
+    shapes; every assigned arch has a decoder, so the only skip rule here is
+    the sub-quadratic requirement for long_500k."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "full-attention arch: long_500k requires sub-quadratic attention (assignment rule; see DESIGN.md §4)"
+    return True, ""

@@ -1,0 +1,43 @@
+"""The paper's primary contribution: computation-communication tradeoff
+analysis and placement for block pipelines (camera nodes then, TPU pods now).
+
+- pipeline:  Block / Pipeline work descriptors (paper Fig. 1)
+- costmodel: energy + throughput regimes, hardware profiles, TPU roofline
+- placement: cut-point solver + sharding-plan solver
+- cascade:   progressive filtering, TPU-native (masked + compacting)
+- reduction: early data reduction for the slow link (int8 EF, top-k, pod AR)
+"""
+
+from repro.core.pipeline import Block, BlockKind, Pipeline, linear_pipeline
+from repro.core.costmodel import (
+    HardwareProfile,
+    Roofline,
+    EnergyReport,
+    ThroughputReport,
+    energy_cost,
+    throughput_cost,
+    format_roofline_table,
+    TPU_V5E,
+    POD_LINK,
+)
+from repro.core.placement import (
+    CutSolution,
+    ShardingPlan,
+    PlanScore,
+    solve_cut,
+    solve_sharding,
+    rank_sharding,
+    estimate_plan,
+)
+from repro.core.cascade import Stage, CascadeResult, masked_cascade, compacting_cascade, cascade_flops
+from repro.core.reduction import (
+    EFState,
+    quantize_int8,
+    dequantize_int8,
+    quantize_bits,
+    ef_compress_int8,
+    ef_compress_topk,
+    compressed_pod_allreduce,
+    uncompressed_pod_allreduce,
+    compress_boundary,
+)

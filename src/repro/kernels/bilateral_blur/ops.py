@@ -1,0 +1,25 @@
+"""jit'd wrapper: n iterations of the bilateral-grid blur (paper: the BSSA
+refinement loop the FPGA accelerates)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.bilateral_blur.kernel import bilateral_blur_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("n_iters", "block_gy", "interpret"))
+def refine_grid(val, wt, *, n_iters: int = 8, block_gy: int = 32,
+                interpret: bool = False):
+    gy = val.shape[0]
+    bgy = min(block_gy, gy)
+    while gy % bgy:
+        bgy -= 1
+
+    def body(i, carry):
+        v, w = carry
+        return bilateral_blur_pallas(v, w, block_gy=bgy, interpret=interpret)
+
+    return jax.lax.fori_loop(0, n_iters, body, (val, wt))

@@ -1,0 +1,7 @@
+"""Oracle: the camera substrate's blur_121 applied to (value, weight)."""
+
+from repro.camera.bssa import blur_121
+
+
+def blur_ref(val, wt):
+    return blur_121(val), blur_121(wt)

@@ -1,0 +1,123 @@
+"""Flash attention for TPU (pl.pallas_call + BlockSpec VMEM tiling).
+
+Blockwise online-softmax attention: grid = (batch*heads, q_blocks,
+k_blocks) with the k dimension 'arbitrary' (sequential) so the running
+(m, l, acc) state lives in VMEM scratch across k iterations.  Per-program
+VMEM footprint: q (block_q, d) + k/v (block_k, d) + scratch (block_q, d)
+f32 — all MXU-aligned (block sizes multiples of 128, d = head_dim).
+
+Causal and sliding-window masks are applied from absolute positions, so
+the same kernel serves full attention, SWA (mixtral), and prefill.
+Fully-masked (q_block, k_block) pairs are skipped with pl.when — the
+cascade idea at kernel granularity: don't spend MXU cycles on work a
+cheap test can discard.
+
+TARGET: TPU (MXU).  This container is CPU-only: tests run interpret=True
+against ref.py; the dry-run lowers the pure-jnp streaming reference
+instead (Pallas does not lower to the CPU backend).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, window, block_q: int,
+                  block_k: int, n_k_blocks: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+
+    # static-ish skip: with causality, blocks entirely in the future are dead
+    run = jnp.bool_(True)
+    if causal:
+        run = (ki * block_k) <= (qi * block_q + block_q - 1)
+    if window is not None:
+        run = jnp.logical_and(
+            run, (ki * block_k + block_k - 1) > (qi * block_q - window))
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale          # (bq, d)
+        k = k_ref[0].astype(jnp.float32)                  # (bk, d)
+        v = v_ref[0].astype(jnp.float32)                  # (bk, dv)
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)           # (bq, bk)
+        mask = jnp.bool_(True)
+        if causal:
+            mask = k_pos <= q_pos
+        if window is not None:
+            mask = jnp.logical_and(mask, k_pos > q_pos - window)
+        logits = jnp.where(mask, logits, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(logits, axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(logits - m_new[:, None])
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == n_k_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-37)
+        o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q, k, v, *, causal=True, window=None, scale=None,
+                         block_q=256, block_k=256, interpret=False):
+    """q: (BH, s, d), k/v: (BH, t, d) -> (BH, s, d).
+
+    Shapes must tile exactly (ops.py pads); d should be a multiple of 128
+    on real TPU for MXU alignment.
+    """
+    BH, s, d = q.shape
+    t = k.shape[1]
+    dv = v.shape[2]
+    block_q = min(block_q, s)
+    block_k = min(block_k, t)
+    assert s % block_q == 0 and t % block_k == 0, (s, t, block_q, block_k)
+    n_q, n_k = s // block_q, t // block_k
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, n_k_blocks=n_k)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda h, qi, ki: (h, qi, 0)),
+            pl.BlockSpec((1, block_k, d), lambda h, qi, ki: (h, ki, 0)),
+            pl.BlockSpec((1, block_k, dv), lambda h, qi, ki: (h, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, dv), lambda h, qi, ki: (h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, s, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),        # m (running max)
+            pltpu.VMEM((block_q,), jnp.float32),        # l (running denom)
+            pltpu.VMEM((block_q, dv), jnp.float32),     # acc
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,58 @@
+"""jit'd public wrapper: (b, s, H, d) attention via the flash kernel.
+
+Handles GQA head expansion, (b, H) flattening, and block padding; this is
+the call signature the model stack would use on real TPU hardware (the
+CPU dry-run keeps the jnp streaming reference — Pallas lowers to TPU).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+
+
+def _pad_to(x, axis, mult):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x, 0
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), pad
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=None, block_q=256,
+                    block_k=256, interpret=False):
+    """q: (b, s, H, d); k/v: (b, t, KV, d) with KV | H -> (b, s, H, d)."""
+    b, s, H, d = q.shape
+    KV = k.shape[2]
+    if KV != H:
+        g = H // KV
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+
+    qf = jnp.moveaxis(q, 2, 1).reshape(b * H, s, d)
+    kf = jnp.moveaxis(k, 2, 1).reshape(b * H, k.shape[1], d)
+    vf = jnp.moveaxis(v, 2, 1).reshape(b * H, v.shape[1], v.shape[-1])
+
+    bq = min(block_q, max(s, 1))
+    bk = min(block_k, max(kf.shape[1], 1))
+    qf, pad_q = _pad_to(qf, 1, bq)
+    kf, pad_k = _pad_to(kf, 1, bk)
+    vf, _ = _pad_to(vf, 1, bk)
+    # padded k positions must never win: causal masking handles the q side;
+    # for the k side we rely on causal=True cells (all ours) or window
+    if pad_k and not causal:
+        raise ValueError("non-causal padding unsupported; pad inputs upstream")
+
+    out = flash_attention_bhsd(qf, kf, vf, causal=causal, window=window,
+                               block_q=bq, block_k=bk, interpret=interpret)
+    if pad_q:
+        out = out[:, :s]
+    return jnp.moveaxis(out.reshape(b, H, s, -1), 1, 2)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal=True, window=None, scale=None):
+    """q: (BH, s, d), k/v: (BH, t, d|dv) -> (BH, s, dv).  Dense softmax."""
+    BH, s, d = q.shape
+    t = k.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    logits = jnp.einsum("hsd,htd->hst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    q_pos = jnp.arange(s)[:, None]
+    k_pos = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    logits = jnp.where(mask[None], logits, NEG_INF)
+    probs = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    probs = probs / jnp.maximum(jnp.sum(probs, axis=-1, keepdims=True), 1e-37)
+    out = jnp.einsum("hst,htd->hsd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)

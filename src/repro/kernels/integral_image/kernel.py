@@ -1,0 +1,57 @@
+"""Streaming integral image for TPU (paper §III-B, hardware-adapted).
+
+The paper's ASIC computes the integral image with a two-row buffer,
+streaming pixels once.  The TPU-native re-think (DESIGN.md §2): process
+the image in row *blocks*; each grid step loads (block_h, w) into VMEM,
+does a row-wise prefix sum (VPU cumsum) plus a column-wise prefix within
+the block, adds the running carry row, and stores the completed integral
+rows.  The carry (one row, like the hardware's "last row" buffer) lives in
+VMEM scratch across sequential grid steps — the same never-hold-the-frame
+dataflow, blocked for a vector machine instead of a shift register.
+
+Batched over a leading dim (frames).  Width must fit VMEM (~176 for
+WISPCam; up to ~32k f32 is fine).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _integral_kernel(img_ref, out_ref, carry_ref, *, block_h: int):
+    bi = pl.program_id(0)     # frame (parallel)
+    ri = pl.program_id(1)     # row block (sequential)
+
+    @pl.when(ri == 0)
+    def _init():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    rows = img_ref[0].astype(jnp.float32)            # (block_h, w)
+    row_prefix = jnp.cumsum(rows, axis=1)            # per-row prefix
+    col_prefix = jnp.cumsum(row_prefix, axis=0)      # within-block column sum
+    ii = col_prefix + carry_ref[...][None, :]
+    out_ref[0] = ii.astype(out_ref.dtype)
+    carry_ref[...] = ii[-1]
+
+
+def integral_image_pallas(img, *, block_h: int = 32, interpret: bool = False):
+    """img: (n, h, w) -> integral (n, h, w) [no zero padding row/col —
+    ops.py adds it to match the camera.integral convention]."""
+    n, h, w = img.shape
+    block_h = min(block_h, h)
+    assert h % block_h == 0, (h, block_h)
+    grid = (n, h // block_h)
+    return pl.pallas_call(
+        functools.partial(_integral_kernel, block_h=block_h),
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, block_h, w), lambda b, r: (b, r, 0))],
+        out_specs=pl.BlockSpec((1, block_h, w), lambda b, r: (b, r, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, h, w), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((w,), jnp.float32)],
+        interpret=interpret,
+    )(img)

@@ -1,0 +1,24 @@
+"""jit'd wrapper: batched integral image with the camera zero-pad convention."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.integral_image.kernel import integral_image_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("block_h", "interpret"))
+def integral_image(img, *, block_h: int = 32, interpret: bool = False):
+    """img: (..., h, w) -> (..., h+1, w+1), ii[...,0,:]=ii[...,:,0]=0."""
+    lead = img.shape[:-2]
+    h, w = img.shape[-2:]
+    flat = img.reshape(-1, h, w)
+    bh = block_h
+    while h % bh:
+        bh -= 1
+    ii = integral_image_pallas(flat, block_h=bh, interpret=interpret)
+    ii = ii.reshape(*lead, h, w)
+    return jnp.pad(ii, [(0, 0)] * len(lead) + [(1, 0), (1, 0)])

@@ -1,0 +1,8 @@
+"""Oracle: plain double cumsum (same as repro.camera.integral)."""
+
+import jax.numpy as jnp
+
+
+def integral_ref(img):
+    """img: (n, h, w) -> (n, h, w) f32 (no zero-pad row/col)."""
+    return jnp.cumsum(jnp.cumsum(img.astype(jnp.float32), axis=-2), axis=-1)

@@ -1,0 +1,79 @@
+"""Int8 quantized matmul + LUT sigmoid for TPU (paper §III-A, adapted).
+
+The face-auth NN ASIC: 8x 8-bit PEs doing systolic MACs into a wide
+accumulator, then a 256-entry LUT sigmoid.  TPU-native equivalent
+(DESIGN.md §2): int8 x int8 -> int32 tiles on the MXU, f32 rescale, LUT
+activation done as a VMEM lookup.  Tiled (block_m, block_k) x (block_k,
+block_n) with the k grid dimension sequential and an int32 VMEM
+accumulator — the standard Pallas matmul skeleton, int8-ized.
+
+Also serves as the framework's reference int8 GEMM for the gradient-
+compression path (core/reduction) — same rescale convention.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _qmm_kernel(x_ref, w_ref, lut_ref, o_ref, acc_ref, *,
+                n_k_blocks: int, scale_x: float, scale_w: float,
+                apply_lut: bool, lut_lo: float, lut_hi: float,
+                lut_entries: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.int32)          # (bm, bk) int8 -> i32
+    w = w_ref[...].astype(jnp.int32)          # (bk, bn)
+    acc_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+
+    @pl.when(ki == n_k_blocks - 1)
+    def _finalize():
+        y = acc_ref[...].astype(jnp.float32) * (scale_x * scale_w)
+        if apply_lut:
+            # hardware LUT: clamp to [lo, hi], index 256-entry table
+            idx = jnp.clip(
+                ((y - lut_lo) / (lut_hi - lut_lo) * (lut_entries - 1)),
+                0, lut_entries - 1).astype(jnp.int32)
+            y = lut_ref[...][idx.reshape(-1)].reshape(y.shape)
+        o_ref[...] = y
+
+
+def quant_matmul_pallas(x_q, w_q, lut, *, scale_x: float, scale_w: float,
+                        apply_lut: bool = True, lut_lo: float = -8.0,
+                        lut_hi: float = 8.0, block_m: int = 128,
+                        block_n: int = 128, block_k: int = 128,
+                        interpret: bool = False):
+    """x_q: (m, k) int8, w_q: (k, n) int8, lut: (256,) f32 -> (m, n) f32."""
+    m, k = x_q.shape
+    n = w_q.shape[1]
+    bm, bk, bn = min(block_m, m), min(block_k, k), min(block_n, n)
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, (m, k, n, bm, bk, bn)
+
+    kernel = functools.partial(
+        _qmm_kernel, n_k_blocks=k // bk, scale_x=scale_x, scale_w=scale_w,
+        apply_lut=apply_lut, lut_lo=lut_lo, lut_hi=lut_hi,
+        lut_entries=lut.shape[0])
+
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda mi, ni, ki: (mi, ki)),
+            pl.BlockSpec((bk, bn), lambda mi, ni, ki: (ki, ni)),
+            pl.BlockSpec(lut.shape, lambda mi, ni, ki: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda mi, ni, ki: (mi, ni)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(x_q, w_q, lut)

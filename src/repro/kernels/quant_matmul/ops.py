@@ -1,0 +1,68 @@
+"""jit'd wrapper: quantize f32 operands per-tensor and run the int8 kernel.
+
+`nn_forward_quantized` runs the paper's whole 400-8-1 NN on the kernel —
+the ASIC's datapath end-to-end (int8 MACs + LUT sigmoid at both layers).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quant_matmul.kernel import quant_matmul_pallas
+
+
+def symmetric_quantize(x, bits: int = 8):
+    qmax = 2 ** (bits - 1) - 1
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / qmax
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(jnp.int8)
+    return q, scale
+
+
+def _pad2(x, bm, bk):
+    m, k = x.shape
+    return jnp.pad(x, ((0, (-m) % bm), (0, (-k) % bk)))
+
+
+@functools.partial(jax.jit, static_argnames=("apply_lut", "interpret"))
+def quant_matmul(x, w, lut, *, apply_lut=True, interpret=False):
+    """f32 in, int8 compute, rescale + optional LUT outside the kernel
+    (scales are data-dependent here, so they can't be kernel constants)."""
+    m, k = x.shape
+    n = w.shape[1]
+    x_q, sx = symmetric_quantize(x)
+    w_q, sw = symmetric_quantize(w)
+    bm = 8 if m <= 8 else 128
+    bk = 128 if k >= 128 else k
+    bn = 128 if n >= 128 else n
+    xp = _pad2(x_q, bm, bk)
+    wp = _pad2(w_q, bk, bn)
+    out = quant_matmul_pallas(
+        xp, wp, lut, scale_x=1.0, scale_w=1.0,
+        apply_lut=False, interpret=interpret)
+    y = out[:m, :n] * (sx * sw)
+    if apply_lut:
+        entries = lut.shape[0]
+        idx = jnp.clip(((y + 8.0) / 16.0 * (entries - 1)), 0, entries - 1).astype(jnp.int32)
+        y = lut[idx]
+    return y
+
+
+def quant_matmul_static(x_q, w_q, lut, *, scale_x: float, scale_w: float,
+                        apply_lut=True, interpret=False):
+    """ASIC path: pre-quantized operands with *calibrated* (static) scales —
+    rescale and the 256-entry LUT sigmoid run inside the kernel, exactly
+    like the hardware datapath."""
+    m, k = x_q.shape
+    n = w_q.shape[1]
+    bm = 8 if m <= 8 else 128
+    bk = 128 if k >= 128 else k
+    bn = 128 if n >= 128 else n
+    xp = _pad2(x_q, bm, bk)
+    wp = _pad2(w_q, bk, bn)
+    out = quant_matmul_pallas(
+        xp, wp, lut, scale_x=scale_x, scale_w=scale_w,
+        apply_lut=apply_lut, interpret=interpret)
+    return out[:m, :n]

@@ -1,0 +1,15 @@
+"""Oracle: int32 matmul of int8 operands + rescale + LUT sigmoid."""
+
+import jax.numpy as jnp
+
+
+def quant_matmul_ref(x_q, w_q, lut, *, scale_x, scale_w, apply_lut=True,
+                     lut_lo=-8.0, lut_hi=8.0):
+    acc = jnp.einsum("mk,kn->mn", x_q.astype(jnp.int32), w_q.astype(jnp.int32))
+    y = acc.astype(jnp.float32) * (scale_x * scale_w)
+    if apply_lut:
+        entries = lut.shape[0]
+        idx = jnp.clip(((y - lut_lo) / (lut_hi - lut_lo) * (entries - 1)),
+                       0, entries - 1).astype(jnp.int32)
+        y = lut[idx]
+    return y

@@ -1,0 +1,23 @@
+"""jit'd wrapper for the chunked WKV kernel (pads T to the chunk size)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rwkv_scan.kernel import rwkv_wkv_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv_wkv(r, k, v, w, u, *, chunk: int = 32, interpret: bool = False):
+    """(BH, T, K) x3 + (BH, T, K) decays + (BH, K) bonus -> (BH, T, V)."""
+    BH, T, K = r.shape
+    pad = (-T) % chunk
+    if pad:
+        zpad = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0)))
+        r, k, v = zpad(r), zpad(k), zpad(v)
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+    out = rwkv_wkv_pallas(r, k, v, w, u, chunk=chunk, interpret=interpret)
+    return out[:, :T]

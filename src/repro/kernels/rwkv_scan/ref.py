@@ -1,0 +1,25 @@
+"""Oracle: sequential WKV recurrence (matches models/ssm._wkv_step)."""
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv_ref(r, k, v, w, u):
+    """r/k/w: (BH, T, K), v: (BH, T, V), u: (BH, K) -> (BH, T, V)."""
+    BH, T, K = r.shape
+    V = v.shape[2]
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp                       # (BH, K) ...
+        kv = kt[:, :, None] * vt[:, None, :]       # (BH, K, V)
+        out = jnp.einsum("bk,bkv->bv", rt, S + u[:, :, None] * kv)
+        S = wt[:, :, None] * S + kv
+        return S, out
+
+    seq_first = lambda t: jnp.moveaxis(t, 1, 0)
+    S0 = jnp.zeros((BH, K, V), jnp.float32)
+    _, outs = jax.lax.scan(
+        step, S0,
+        (seq_first(r.astype(jnp.float32)), seq_first(k.astype(jnp.float32)),
+         seq_first(v.astype(jnp.float32)), seq_first(w.astype(jnp.float32))))
+    return jnp.moveaxis(outs, 0, 1)

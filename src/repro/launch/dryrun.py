@@ -1,0 +1,227 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+# --- everything below may import jax -------------------------------------
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import CONFIGS, get_config, input_specs, list_archs
+from repro.configs.shapes import SHAPES, applicable
+from repro.core.costmodel import Roofline, TPU_V5E
+from repro.launch.hlo_stats import analyze_hlo
+from repro.launch.mesh import make_production_mesh, mesh_chip_count
+from repro.parallel.plans import plan_rules, recommend_plan
+from repro.models.layers import abstract_params
+from repro.models.transformer import Model
+from repro.parallel.axes import use_sharding
+from repro.train.optimizer import AdamWConfig, OptState
+from repro.train.step import (init_ef_states, make_prefill_step,
+                             make_serve_step, make_train_step,
+                             make_train_step_compressed)
+
+"""Multi-pod dry-run (assignment deliverable e).
+
+For every (arch x shape x mesh) cell: build abstract inputs
+(ShapeDtypeStruct, zero allocation), `jit(...).lower(...).compile()` under
+the production mesh, and record memory_analysis / cost_analysis /
+collective-byte stats.  A cell failing to compile (sharding mismatch, OOM
+at compile, unsupported collective) is a bug in this framework — the
+dry-run is the proof the distribution config is coherent.
+
+Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json; the
+roofline harness (benchmarks/roofline.py) consumes them.
+"""
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "experiments", "dryrun")
+
+
+def rules_for_cell(cfg, shape):
+    """Cell-specific sharding-rule overrides (the placement solver's pick)."""
+    rules = {}
+    if shape.mode == "decode" and shape.batch == 1:
+        # long-context decode: batch unshardable; shard the cache/state over
+        # 'data' (context parallelism) instead.
+        rules["cache_seq"] = "data"
+        rules["batch"] = None
+    return rules
+
+
+def opt_state_abstract(params_abs):
+    zeros_like_f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32,
+                                                    sharding=p.sharding)
+    return OptState(
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        master=jax.tree_util.tree_map(zeros_like_f32, params_abs),
+        mu=jax.tree_util.tree_map(zeros_like_f32, params_abs),
+        nu=jax.tree_util.tree_map(zeros_like_f32, params_abs),
+    )
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool, verbose=True,
+               accum: int = 4, plan: str = "auto", plan_overrides=None,
+               grad_compress: bool = False):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    runs, why = applicable(cfg, shape)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    cell = f"{arch}__{shape_name}__{mesh_name}"
+    if not runs:
+        return {"cell": cell, "status": "skipped", "reason": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh_chip_count(mesh)
+    model = Model(cfg)
+    t0 = time.time()
+
+    if plan == "auto":
+        plan = recommend_plan(cfg, shape)
+    rules = plan_rules(plan)
+    rules.update(rules_for_cell(cfg, shape))
+    if plan_overrides:
+        rules.update(plan_overrides)
+    with use_sharding(mesh, rules) as ctx:
+        params_abs = abstract_params(model.specs(), ctx)
+        inputs = input_specs(cfg, shape, ctx)
+
+        if shape.mode == "train":
+            opt_abs = opt_state_abstract(params_abs)
+            batch = {"tokens": inputs["tokens"]}
+            if cfg.is_encdec:
+                batch["enc_input"] = inputs["enc_input"]
+            if grad_compress and multi_pod:
+                # int8+EF gradient exchange across pods (core/reduction)
+                step = make_train_step_compressed(model, AdamWConfig())
+                ef_abs = jax.tree_util.tree_map(
+                    lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32,
+                                                   sharding=p.sharding),
+                    params_abs)
+                fn = jax.jit(step, donate_argnums=(0, 1, 2))
+                lowered = fn.lower(params_abs, opt_abs, ef_abs, batch)
+            else:
+                step = make_train_step(model, AdamWConfig(), accum=accum)
+                fn = jax.jit(step, donate_argnums=(0, 1))
+                lowered = fn.lower(params_abs, opt_abs, batch)
+        elif shape.mode == "prefill":
+            step = make_prefill_step(model)
+            batch = {"tokens": inputs["tokens"]}
+            if cfg.is_encdec:
+                batch["enc_input"] = inputs["enc_input"]
+            fn = jax.jit(step)
+            lowered = fn.lower(params_abs, batch)
+        else:  # decode
+            step = make_serve_step(model)
+            fn = jax.jit(step, donate_argnums=(2,))
+            lowered = fn.lower(params_abs, inputs["token"], inputs["cache"],
+                               inputs["position"])
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = analyze_hlo(compiled.as_text())
+
+    mem_dict = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        mem_dict[k] = getattr(mem, k, None)
+
+    # cost_analysis is per-device and does NOT multiply while-loop bodies
+    # (measured; see EXPERIMENTS.md §Dry-run methodology) — kept for
+    # reference; the roofline uses the loop-aware analyzer, scaled to
+    # global by chip count.
+    xla_flops_perdev = float(cost.get("flops", 0.0)) if cost else 0.0
+    xla_bytes_perdev = float(cost.get("bytes accessed", 0.0)) if cost else 0.0
+
+    tokens = shape.batch * (shape.seq if shape.mode in ("train", "prefill") else 1)
+    mult = 6.0 if shape.mode == "train" else 2.0
+    model_flops = mult * model.n_active_params() * tokens
+
+    rec = {
+        "cell": cell,
+        "status": "ok",
+        "arch": arch,
+        "shape": shape_name,
+        "mode": shape.mode,
+        "mesh": mesh_name,
+        "plan": plan,
+        "accum": accum,
+        "grad_compress": bool(grad_compress and multi_pod),
+        "chips": chips,
+        "n_params": model.n_params(),
+        "n_active_params": model.n_active_params(),
+        "tokens": tokens,
+        "model_flops": model_flops,
+        "hlo_flops": hlo.flops * chips,                 # global, loop-aware
+        "hlo_bytes": hlo.bytes_rw * chips,              # global r/w proxy
+        "collective_bytes": hlo.collective_bytes * chips,
+        "collective_detail": {k: v * chips for k, v in hlo.coll_bytes_by_op.items()},
+        "collective_counts": dict(hlo.coll_count_by_op),
+        "xla_cost_analysis": {"flops_per_device": xla_flops_perdev,
+                              "bytes_per_device": xla_bytes_perdev},
+        "memory_analysis": mem_dict,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+    }
+    if verbose:
+        print(f"[{cell}] OK lower={t_lower:.1f}s compile={t_compile:.1f}s")
+        print(f"  memory_analysis(per-device): {mem_dict}")
+        print(hlo.describe())
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all", help="arch id or 'all'")
+    ap.add_argument("--shape", default="all", help="shape name or 'all'")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--plan", default="auto")
+    ap.add_argument("--accum", type=int, default=4)
+    ap.add_argument("--grad-compress", action="store_true")
+    ap.add_argument("--out", default=RESULTS_DIR)
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    archs = list_archs() if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    failures = []
+    for arch in archs:
+        for shape_name in shapes:
+            for multi_pod in meshes:
+                mesh_name = "2x16x16" if multi_pod else "16x16"
+                cell = f"{arch}__{shape_name}__{mesh_name}"
+                path = os.path.join(args.out, cell + ".json")
+                try:
+                    rec = lower_cell(arch, shape_name, multi_pod,
+                                     accum=args.accum, plan=args.plan,
+                                     grad_compress=args.grad_compress)
+                except Exception as e:  # noqa: BLE001 — record and continue
+                    traceback.print_exc()
+                    rec = {"cell": cell, "status": "failed", "error": str(e)[-2000:]}
+                    failures.append(cell)
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+    if failures:
+        print(f"\nFAILED cells ({len(failures)}):")
+        for c in failures:
+            print(" ", c)
+        raise SystemExit(1)
+    print("\nAll requested cells passed the dry-run.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,328 @@
+"""Loop-aware HLO analysis: FLOPs, byte traffic, collective bytes.
+
+Why not just ``compiled.cost_analysis()``?  Two measured facts (see
+EXPERIMENTS.md §Dry-run methodology):
+
+1. it reports **per-device** numbers for SPMD modules, and
+2. it counts ``while`` loop bodies **once**, so a scan-over-layers model is
+   undercounted by ~n_layers x.
+
+Since the framework deliberately scans layers (compile-time sanity at 512
+devices), we parse the post-optimization HLO ourselves:
+
+* split the module into computations and build a per-computation symbol
+  table (operand shapes are not inlined in post-opt HLO);
+* walk the call graph (while/call/fusion/conditional edges), multiplying
+  while bodies by their trip count (``known_trip_count`` backend config,
+  falling back to the loop-condition constant);
+* FLOPs: dots = 2 * |out| * k from resolved operand shapes + contracting
+  dims; elementwise arithmetic ops = |out| (keeps elementwise-heavy models
+  like RWKV honest);
+* memory traffic: op-aware read+write proxy (dynamic-slice/gather count
+  their slice, not the sliced buffer; DUS counts the update region);
+* collective result-shape bytes by op kind.
+
+All numbers are per-device (shapes in partitioned HLO are shard shapes);
+the dry-run multiplies by chip count to report global quantities.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# NB: tuple shapes may contain /*index=N*/ comments (hence [^()] not [^=])
+_LINE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*((?:\([^()]*\))|(?:[\w\-]+\[[\d,]*\](?:{[^}]*})?))\s*"
+    r"([\w\-]+)\(([^\n]*)$")
+
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+
+_CONST_RE = re.compile(r"[su]\d+\[\]\s+constant\((\d+)\)")
+_TRIP_RE = re.compile(r'"known_trip_count":\s*{"n":\s*"(\d+)"')
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_WHILE_RE = re.compile(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations={([^}]*)}")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims={([\d,]*)}")
+
+_TRIVIAL = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "reshape", "copy-done",
+    "all-gather-done", "all-reduce-done", "collective-permute-done",
+}
+
+# Memory-traffic threshold: tensors below this stay in VMEM/registers on the
+# TPU target (loop-carried scan state, scalars, small reductions) and are not
+# charged as HBM traffic.  Without it, per-step values of a 4096-iteration
+# sequence scan dominate the byte count and the memory roofline term is
+# nonsense (measured: rwkv train "memory_s" = 1e5 s).  1 MiB is conservative:
+# v5e VMEM is two orders larger.
+_HBM_MIN_BYTES = 1 << 20
+
+# elementwise ops counted as 1 flop / output element
+_ARITH = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "exponential", "exponential-minus-one", "log", "log-plus-one", "tanh",
+    "rsqrt", "sqrt", "negate", "abs", "floor", "ceil", "sign", "cosine",
+    "sine", "logistic", "atan2", "remainder", "select", "compare", "and",
+    "or", "xor", "not", "clamp", "convert", "reduce", "erf",
+}
+
+
+def _shape_elems_bytes(s: str):
+    elems, total = 0, 0
+    for m in _SHAPE_RE.finditer(s):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        total += n * _DTYPE_BYTES[dt]
+    return elems, total
+
+
+def _lhs_shape(s: str):
+    m = _SHAPE_RE.search(s)
+    if not m:
+        return ()
+    return tuple(int(d) for d in m.group(2).split(",") if d)
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape_str: str
+    op: str
+    rest: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    is_entry: bool = False
+    instrs: list = dataclasses.field(default_factory=list)
+    consts: list = dataclasses.field(default_factory=list)
+
+
+def _split_computations(hlo_text: str):
+    comps = []
+    cur = None
+    depth = 0
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_HDR_RE.match(line)
+            if m and line.endswith("{"):
+                cur = Computation(name=m.group(2), is_entry=bool(m.group(1)))
+                depth = 1
+            continue
+        depth += line.count("{") - line.count("}")
+        if depth <= 0:
+            comps.append(cur)
+            cur = None
+            continue
+        lm = _LINE_RE.match(line)
+        if lm:
+            cur.instrs.append(Instr(lm.group(1), lm.group(2), lm.group(3),
+                                    lm.group(4)))
+        for cm in _CONST_RE.finditer(line):
+            cur.consts.append(int(cm.group(1)))
+    if cur is not None:
+        comps.append(cur)
+    return comps
+
+
+@dataclasses.dataclass
+class CompStats:
+    flops: float = 0.0
+    bytes_rw: float = 0.0
+    coll_bytes: dict = dataclasses.field(default_factory=lambda: defaultdict(float))
+    coll_count: dict = dataclasses.field(default_factory=lambda: defaultdict(float))
+    whiles: list = dataclasses.field(default_factory=list)   # (body, trip)
+    callees: list = dataclasses.field(default_factory=list)
+
+
+def _analyze_computation(comp: Computation, cond_consts: dict) -> CompStats:
+    st = CompStats()
+    table = {}   # instr name -> (elems, bytes) of its output
+    for ins in comp.instrs:
+        table[ins.name] = _shape_elems_bytes(ins.shape_str)
+
+    def operand_sizes(rest: str, limit_paren=True):
+        # operands live before the first "), " after the open paren
+        args = rest.split(")", 1)[0] if limit_paren else rest
+        out = []
+        for m in _OPERAND_RE.finditer(args):
+            if m.group(1) in table:
+                out.append(table[m.group(1)])
+        return out
+
+    for ins in comp.instrs:
+        out_elems, out_bytes = table[ins.name]
+        op = ins.op
+        base = op.replace("-start", "")
+
+        # call-graph edges
+        wm = _WHILE_RE.search(ins.rest)
+        if op == "while" and wm:
+            trip_m = _TRIP_RE.search(ins.rest)
+            if trip_m:
+                trip = int(trip_m.group(1))
+            else:
+                trip = cond_consts.get(wm.group(1), 1)
+            st.whiles.append((wm.group(2), trip))
+        else:
+            for cm in _CALLS_RE.finditer(ins.rest):
+                st.callees.append(cm.group(1))
+            bm = _BRANCH_RE.search(ins.rest)
+            if bm:
+                st.callees.extend(x.strip().lstrip("%") for x in bm.group(1).split(","))
+
+        if op in _TRIVIAL or op == "while":
+            continue
+
+        if base in _COLLECTIVES:
+            st.coll_bytes[base] += out_bytes
+            st.coll_count[base] += 1
+            if out_bytes >= _HBM_MIN_BYTES:
+                st.bytes_rw += 2 * out_bytes
+            continue
+
+        if op == "dot":
+            ops_sz = operand_sizes(ins.rest)
+            lhs = None
+            args = ins.rest.split(")", 1)[0]
+            names = _OPERAND_RE.findall(args)
+            k = 1
+            cm = _LHS_CONTRACT_RE.search(ins.rest)
+            if cm and names:
+                # resolve lhs dims from the defining instruction's shape str
+                lhs_name = names[0]
+                lhs_shape = ()
+                for other in comp.instrs:
+                    if other.name == lhs_name:
+                        lhs_shape = _lhs_shape(other.shape_str)
+                        break
+                for ci in [int(x) for x in cm.group(1).split(",") if x]:
+                    if ci < len(lhs_shape):
+                        k *= lhs_shape[ci]
+            st.flops += 2.0 * out_elems * k
+            st.bytes_rw += sum(b for b in [out_bytes] + [b for _, b in ops_sz]
+                               if b >= _HBM_MIN_BYTES)
+            continue
+
+        if op in ("dynamic-slice", "gather"):
+            if out_bytes >= _HBM_MIN_BYTES:
+                st.bytes_rw += 2 * out_bytes
+            continue
+        if op == "dynamic-update-slice":
+            ops_sz = operand_sizes(ins.rest)
+            upd = ops_sz[1][1] if len(ops_sz) > 1 else out_bytes
+            if upd >= _HBM_MIN_BYTES:
+                st.bytes_rw += 2 * upd
+            continue
+        if op == "scatter":
+            ops_sz = operand_sizes(ins.rest)
+            upd = ops_sz[2][1] if len(ops_sz) > 2 else out_bytes
+            if upd >= _HBM_MIN_BYTES:
+                st.bytes_rw += 2 * upd
+            continue
+
+        if op in _ARITH:
+            st.flops += out_elems
+        st.bytes_rw += sum(b for b in [out_bytes]
+                           + [b for _, b in operand_sizes(ins.rest)]
+                           if b >= _HBM_MIN_BYTES)
+    return st
+
+
+@dataclasses.dataclass
+class HLOAnalysis:
+    """Per-device, loop-multiplied totals for one compiled module."""
+
+    flops: float
+    bytes_rw: float
+    coll_bytes_by_op: dict
+    coll_count_by_op: dict
+    n_computations: int
+
+    @property
+    def collective_bytes(self) -> float:
+        return float(sum(self.coll_bytes_by_op.values()))
+
+    # aliases kept for earlier call sites
+    @property
+    def bytes_by_op(self):
+        return self.coll_bytes_by_op
+
+    @property
+    def count_by_op(self):
+        return self.coll_count_by_op
+
+    @property
+    def total_bytes(self):
+        return self.collective_bytes
+
+    def describe(self) -> str:
+        lines = [f"  flops (loop-mult, per-device): {self.flops:.4e}",
+                 f"  bytes r/w proxy (per-device):  {self.bytes_rw:.4e}"]
+        for op in sorted(self.coll_bytes_by_op):
+            lines.append(
+                f"  {op:>20s}: {self.coll_count_by_op[op]:10.0f} ops, "
+                f"{self.coll_bytes_by_op[op]/2**30:12.5f} GiB")
+        lines.append(f"  {'collective TOTAL':>20s}: {'':16s} "
+                     f"{self.collective_bytes/2**30:12.5f} GiB")
+        return "\n".join(lines)
+
+
+def analyze_hlo(hlo_text: str) -> HLOAnalysis:
+    comps = {c.name: c for c in _split_computations(hlo_text)}
+    cond_consts = {c.name: (max(c.consts) if c.consts else 1) for c in comps.values()}
+    stats = {name: _analyze_computation(c, cond_consts) for name, c in comps.items()}
+    entry = next((c.name for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        return HLOAnalysis(0.0, 0.0, {}, {}, len(comps))
+
+    flops = 0.0
+    bytes_rw = 0.0
+    coll_b = defaultdict(float)
+    coll_c = defaultdict(float)
+
+    def accumulate(name: str, mult: float, stack):
+        if name not in stats or name in stack:
+            return
+        nonlocal flops, bytes_rw
+        st = stats[name]
+        flops += st.flops * mult
+        bytes_rw += st.bytes_rw * mult
+        for op, b in st.coll_bytes.items():
+            coll_b[op] += b * mult
+            coll_c[op] += st.coll_count[op] * mult
+        stack = stack | {name}
+        for body, trip in st.whiles:
+            accumulate(body, mult * trip, stack)
+        for callee in st.callees:
+            accumulate(callee, mult, stack)
+
+    accumulate(entry, 1.0, frozenset())
+    return HLOAnalysis(flops, bytes_rw, dict(coll_b), dict(coll_c), len(comps))
+
+
+def collective_bytes(hlo_text: str) -> HLOAnalysis:
+    return analyze_hlo(hlo_text)

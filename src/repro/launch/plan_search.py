@@ -1,0 +1,88 @@
+"""Analytic plan search: the comp-comm placement solver at the CLI.
+
+Ranks candidate sharding plans for an (arch x shape) cell with the
+three-term roofline estimator (core.placement.estimate_plan) — no
+compilation.  This is `solve_cut` at pod scale (DESIGN.md §2): the same
+enumerate-configurations/argmin structure the paper applies to camera
+pipelines, applied to mesh placements.  The dry-run then validates the
+winner against compiled HLO.
+
+    PYTHONPATH=src python -m repro.launch.plan_search --arch yi-9b \
+        --shape train_4k [--chips 256] [--pods 1]
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from repro.configs.registry import CONFIGS
+from repro.configs.shapes import SHAPES
+from repro.core.placement import ShardingPlan, estimate_plan, rank_sharding
+from repro.models.transformer import Model
+
+
+def candidates(chips: int, pods: int):
+    """Enumerate (dp, fsdp, tp) factorizations of the per-pod chip count."""
+    per_pod = chips // pods
+    out = []
+    t = 1
+    while t <= per_pod:
+        rest = per_pod // t
+        f = 1
+        while f <= rest:
+            d = rest // f
+            if d * f * t == per_pod:
+                out.append(ShardingPlan(f"d{d}f{f}t{t}", data=d, fsdp=f,
+                                        tensor=t, pod=pods))
+                if pods > 1:
+                    out.append(ShardingPlan(f"d{d}f{f}t{t}+gc", data=d, fsdp=f,
+                                            tensor=t, pod=pods,
+                                            grad_compress=True))
+            f *= 2
+        t *= 2
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-9b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--chips", type=int, default=256)
+    ap.add_argument("--pods", type=int, default=1)
+    ap.add_argument("--top", type=int, default=12)
+    args = ap.parse_args()
+
+    cfg = CONFIGS[args.arch]
+    shape = SHAPES[args.shape]
+    model = Model(cfg)
+    n = model.n_params()
+    n_active = model.n_active_params()
+    tokens = shape.batch * (shape.seq if shape.mode != "decode" else 1)
+
+    def estimator(plan):
+        return estimate_plan(
+            plan, name=f"{args.arch}|{args.shape}", params=n,
+            active_params=n_active, layer_flops=2 * n_active * tokens,
+            train=(shape.mode == "train"), tokens=tokens,
+            d_model=cfg.d_model, seq=shape.seq, batch=shape.batch,
+            n_experts=(cfg.moe.n_experts if cfg.moe else 1),
+            top_k=(cfg.moe.top_k if cfg.moe else 1),
+            n_layers=cfg.n_layers)
+
+    ranked = rank_sharding(candidates(args.chips, args.pods), estimator)
+    print(f"{args.arch} x {args.shape} on {args.chips} chips "
+          f"({args.pods} pod{'s' if args.pods > 1 else ''}); "
+          f"params={n:.3e} active={n_active:.3e} tokens={tokens:,}")
+    hdr = (f"{'plan':<22s} {'compute_s':>10s} {'memory_s':>10s} "
+           f"{'collect_s':>10s} {'dominant':>10s} {'feasible':>9s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for s in ranked[: args.top]:
+        r = s.roofline
+        print(f"{s.plan.describe():<22s} {r.compute_s:>10.3f} {r.memory_s:>10.3f} "
+              f"{r.collective_s:>10.3f} {r.dominant:>10s} "
+              f"{'yes' if s.feasible else 'NO: ' + s.why_infeasible[:24]:>9s}")
+
+
+if __name__ == "__main__":
+    main()

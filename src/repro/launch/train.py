@@ -1,0 +1,100 @@
+"""Production training entry point.
+
+    PYTHONPATH=src python -m repro.launch.train --arch yi-9b --steps 200 \
+        [--smoke] [--mesh 2,2,2] [--plan auto] [--grad-compress] \
+        [--ckpt-dir /path] [--global-batch 16] [--seq 64]
+
+On real hardware the mesh comes from the TPU topology; on CPU pass
+``--mesh`` with fake devices via XLA_FLAGS, or omit for single-device.
+Resumes automatically from the newest checkpoint in --ckpt-dir.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-9b")
+    ap.add_argument("--smoke", action="store_true", default=True,
+                    help="reduced config (full configs need a real pod)")
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--global-batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--mesh", default="", help="e.g. '2,2,2' => (pod,data,model)")
+    ap.add_argument("--plan", default="auto")
+    ap.add_argument("--grad-compress", action="store_true")
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    if args.mesh:
+        dims = [int(x) for x in args.mesh.split(",")]
+        n = 1
+        for d in dims:
+            n *= d
+        os.environ.setdefault(
+            "XLA_FLAGS", f"--xla_force_host_platform_device_count={n}")
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.registry import get_config
+    from repro.configs.shapes import ShapeSpec
+    from repro.data.pipeline import DataConfig, batch_for_step, encdec_batch_for_step
+    from repro.models.transformer import Model
+    from repro.parallel.axes import use_sharding
+    from repro.parallel.plans import plan_rules, recommend_plan
+    from repro.train.loop import LoopConfig, train
+    from repro.train.optimizer import AdamWConfig
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    model = Model(cfg)
+    print(f"[train] {cfg.name}{' (reduced)' if args.smoke else ''}: "
+          f"{model.n_params():,} params")
+
+    data = DataConfig(vocab=cfg.vocab, seq=args.seq,
+                      global_batch=args.global_batch, seed=args.seed)
+
+    def make_batch(step):
+        if cfg.is_encdec:
+            b = encdec_batch_for_step(data, cfg.d_model, cfg.enc_seq, step)
+        else:
+            b = batch_for_step(data, step)
+        return {k: jnp.asarray(v) for k, v in b.items()}
+
+    loop_cfg = LoopConfig(total_steps=args.steps, ckpt_every=args.ckpt_every,
+                          ckpt_dir=args.ckpt_dir, accum=args.accum)
+    opt_cfg = AdamWConfig(lr_peak=args.lr, warmup_steps=max(args.steps // 10, 1),
+                          decay_steps=args.steps)
+
+    def run():
+        _, _, out = train(model, make_batch, loop_cfg, opt_cfg, seed=args.seed)
+        hist = out["history"]
+        if hist:
+            print(f"[train] loss {hist[0]['loss']:.4f} -> {hist[-1]['loss']:.4f}; "
+                  f"median step {1e3*sorted(h['dt'] for h in hist)[len(hist)//2]:.0f} ms; "
+                  f"stragglers flagged: {len(out['stragglers'])}")
+
+    if args.mesh:
+        dims = [int(x) for x in args.mesh.split(",")]
+        names = ("pod", "data", "model")[-len(dims):]
+        mesh = jax.make_mesh(tuple(dims), names)
+        shape = ShapeSpec("cli", args.seq, args.global_batch, "train")
+        plan = args.plan if args.plan != "auto" else recommend_plan(cfg, shape)
+        print(f"[train] mesh {dict(zip(names, dims))} plan={plan}"
+              f"{' +int8-pod-AR' if args.grad_compress else ''}")
+        with use_sharding(mesh, plan_rules(plan)):
+            run()
+    else:
+        run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,414 @@
+"""Attention: GQA/MQA/MHA, sliding-window, and DeepSeek MLA, with KV caches.
+
+Three cache layouts, because the KV cache *is* a comp-comm artifact
+(DESIGN.md §4): standard GQA caches (batch, S, n_kv, d_head) x2; sliding-
+window attention caches only the window (a ring buffer — the paper's
+"two-row integral buffer" idea applied to sequence state); MLA caches the
+512-dim latent + rope key instead of 128 heads x 128 dims — a 40x cache
+reduction that is exactly an "early data reduction before the slow link"
+(HBM and, for sharded caches, ICI).
+
+All softmax math in f32; matmuls accumulate in f32 (MXU semantics).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, dense, rms_norm, spec
+from repro.parallel.axes import constrain
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+# ---------------------------------------------------------------------------
+# Specs
+# ---------------------------------------------------------------------------
+
+
+def attn_specs(cfg) -> dict:
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.d_head
+    dt = cfg.param_dtype
+    if cfg.attn_type == "mla":
+        m = cfg.mla
+        out = {
+            "wq": spec((d, H, m.qk_nope + m.qk_rope), ("embed", "heads", None), dtype=dt),
+            "wkv_down": spec((d, m.kv_lora + m.qk_rope), ("embed", "kv_lora"), dtype=dt),
+            "kv_norm": spec((m.kv_lora,), ("kv_lora",), "ones", dtype=dt),
+            "wk_up": spec((m.kv_lora, H, m.qk_nope), ("kv_lora", "heads", None), dtype=dt),
+            "wv_up": spec((m.kv_lora, H, m.v_dim), ("kv_lora", "heads", None), dtype=dt),
+            "wo": spec((H, m.v_dim, d), ("heads", None, "embed"), dtype=dt),
+        }
+        return out
+    out = {
+        "wq": spec((d, H, hd), ("embed", "heads", None), dtype=dt),
+        "wk": spec((d, KV, hd), ("embed", "kv_heads", None), dtype=dt),
+        "wv": spec((d, KV, hd), ("embed", "kv_heads", None), dtype=dt),
+        "wo": spec((H, hd, d), ("heads", None, "embed"), dtype=dt),
+    }
+    if cfg.attn_bias:
+        out["bq"] = spec((H, hd), ("heads", None), "zeros", dtype=dt)
+        out["bk"] = spec((KV, hd), ("kv_heads", None), "zeros", dtype=dt)
+        out["bv"] = spec((KV, hd), ("kv_heads", None), "zeros", dtype=dt)
+    if cfg.qk_norm:
+        out["q_norm"] = spec((hd,), (None,), "ones", dtype=dt)
+        out["k_norm"] = spec((hd,), (None,), "ones", dtype=dt)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Masks
+# ---------------------------------------------------------------------------
+
+
+def causal_mask(q_pos: jax.Array, k_pos: jax.Array, window: Optional[int] = None):
+    """(q, k) bool mask: True = attend.  window limits lookback (SWA)."""
+    m = k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        m &= k_pos[None, :] > (q_pos[:, None] - window)
+    return m
+
+
+def _mha(q, k, v, mask, scale):
+    """q: (b,s,kv,g,d) k,v: (b,t,kv,d) mask: (s,t) or (b,s,t) -> (b,s,kv,g,dv).
+
+    Dense formulation — decode path only (s=1, tiny logits).  Train/prefill
+    use :func:`_mha_streaming` (chunked online softmax), which never
+    materializes the (s, t) logit matrix; full logits at 512 devices cost
+    GiBs of per-device temp (measured — EXPERIMENTS.md §Perf iteration 1).
+    """
+    logits = jnp.einsum("bskgd,btkd->bkgst", q, k, preferred_element_type=jnp.float32)
+    logits = logits * scale
+    if mask.ndim == 2:
+        mask = mask[None]
+    logits = jnp.where(mask[:, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(v.dtype)
+
+
+def _pick_chunk(t: int, target: int = 1024) -> int:
+    """Largest divisor of t that is <= target (static shapes need exactness)."""
+    c = min(t, target)
+    while t % c:
+        c -= 1
+    return c
+
+
+def _mha_streaming(q, k, v, q_pos, k_pos, scale, window=None, chunk=1024):
+    """Online-softmax attention over key chunks (flash-attention semantics).
+
+    q: (b, s, H, d) — full query heads (GQA already expanded; expanding the
+    sharded head axis keeps TP clean: no (kv, group) reshape across the
+    sharded dimension).  k, v: (b, t, H, d).  q_pos: (s,), k_pos: (t,).
+    Returns (b, s, H, d).  Never materializes (s, t); peak temp per chunk is
+    (b, H, s, chunk) f32.  Also the reference semantics for
+    kernels/flash_attention.
+    """
+    b, s, H, d = q.shape
+    t = k.shape[1]
+    dv = v.shape[-1]                 # may differ from d (MLA folded keys)
+    c = _pick_chunk(t, chunk)
+    n_chunks = t // c
+    q32 = q.astype(jnp.float32) * scale
+
+    kc = k.reshape(b, n_chunks, c, H, d)
+    vc = v.reshape(b, n_chunks, c, H, dv)
+    pc = k_pos.reshape(n_chunks, c)
+
+    def body(carry, xs):
+        m, l, acc = carry                       # (b,H,s), (b,H,s), (b,H,s,d)
+        k_i, v_i, p_i = xs                      # (b,c,H,d), (b,c,H,d), (c,)
+        logits = jnp.einsum("bshd,bchd->bhsc", q32, k_i.astype(jnp.float32))
+        valid = p_i[None, :] <= q_pos[:, None]  # (s, c)
+        if window is not None:
+            valid &= p_i[None, :] > (q_pos[:, None] - window)
+        logits = jnp.where(valid[None, None], logits, NEG_INF)
+        m_i = jnp.max(logits, axis=-1)          # (b,H,s)
+        m_new = jnp.maximum(m, m_i)
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(logits - m_new[..., None])  # (b,H,s,c)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhsc,bchd->bhsd", p, v_i.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    init = (
+        jnp.full((b, H, s), NEG_INF, jnp.float32),
+        jnp.zeros((b, H, s), jnp.float32),
+        jnp.zeros((b, H, s, dv), jnp.float32),
+    )
+    (m, l, acc), _ = jax.lax.scan(
+        body, init,
+        (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), pc),
+    )
+    out = acc / jnp.maximum(l, 1e-37)[..., None]
+    return jnp.moveaxis(out, 1, 2).astype(v.dtype)   # (b,s,H,d)
+
+
+def _expand_kv(k, n_heads: int):
+    """(b, t, kv, d) -> (b, t, H, d) by repeating each kv head g times.
+    The repeat happens on the sharded head axis, dividing cleanly under TP."""
+    kv = k.shape[2]
+    g = n_heads // kv
+    if g == 1:
+        return k
+    return jnp.repeat(k, g, axis=2)
+
+
+# ---------------------------------------------------------------------------
+# Standard attention (GQA / MQA / MHA, optional sliding window)
+# ---------------------------------------------------------------------------
+
+
+def _project_qkv(params, cfg, x):
+    q = dense(params["wq"], x, "bsd,dhe->bshe", waxes=("embed", "heads", None))
+    k = dense(params["wk"], x, "bsd,dke->bske", waxes=("embed", "kv_heads", None))
+    v = dense(params["wv"], x, "bsd,dke->bske", waxes=("embed", "kv_heads", None))
+    if cfg.attn_bias:
+        q = q + params["bq"].astype(q.dtype)
+        k = k + params["bk"].astype(k.dtype)
+        v = v + params["bv"].astype(v.dtype)
+    if cfg.qk_norm:
+        q = rms_norm(params["q_norm"], q, cfg.norm_eps)
+        k = rms_norm(params["k_norm"], k, cfg.norm_eps)
+    return q, k, v
+
+
+def attention_train(params, cfg, x, positions, return_kv=False):
+    """Full-sequence causal attention (streaming softmax).  x: (b, s, d)."""
+    b, s, _ = x.shape
+    H = cfg.n_heads
+    q, k, v = _project_qkv(params, cfg, x)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = constrain(q, ("batch", "seq", "heads_act", None))
+    kv_entry = _ring_cache_entry(cfg, k, v) if return_kv else None
+    k = constrain(_expand_kv(k, H), ("batch", "kv_seq", "heads_act", None))
+    v = constrain(_expand_kv(v, H), ("batch", "kv_seq", "heads_act", None))
+    window = cfg.window if cfg.attn_type == "swa" else None
+    pos = jnp.arange(s, dtype=jnp.int32)
+    out = _mha_streaming(q, k, v, pos, pos, 1.0 / math.sqrt(cfg.d_head),
+                         window=window)
+    y = dense(params["wo"], out, "bshe,hed->bsd", waxes=("heads", None, "embed"))
+    if return_kv:
+        return y, kv_entry
+    return y
+
+
+def _ring_cache_entry(cfg, k, v):
+    """Arrange prefill K/V into the decode cache layout.
+
+    Full attention: identity.  SWA: the last ``window`` positions placed at
+    ring slots ``pos % window`` (the decode layout).
+    """
+    if cfg.attn_type != "swa":
+        return {"k": k, "v": v}
+    S = k.shape[1]
+    W = cfg.window
+    if S <= W:
+        pad = [(0, 0), (0, W - S), (0, 0), (0, 0)]
+        return {"k": jnp.pad(k, pad), "v": jnp.pad(v, pad)}
+    # slot i <- largest position p < S with p % W == i
+    slots = jnp.arange(W)
+    pos = (S - 1) - ((S - 1 - slots) % W)
+    return {"k": k[:, pos], "v": v[:, pos]}
+
+
+def init_cache(cfg, batch: int, max_seq: int, dtype=None):
+    """Allocate a decode cache.  SWA caches only the window (ring buffer)."""
+    dtype = dtype or cfg.param_dtype
+    if cfg.attn_type == "mla":
+        m = cfg.mla
+        return {
+            "ckv": jnp.zeros((batch, max_seq, m.kv_lora), dtype),
+            "krope": jnp.zeros((batch, max_seq, m.qk_rope), dtype),
+        }
+    seq = min(max_seq, cfg.window) if cfg.attn_type == "swa" else max_seq
+    return {
+        "k": jnp.zeros((batch, seq, cfg.n_kv, cfg.d_head), dtype),
+        "v": jnp.zeros((batch, seq, cfg.n_kv, cfg.d_head), dtype),
+    }
+
+
+def cache_specs(cfg, batch: int, max_seq: int):
+    """Logical axes of the cache (for dry-run sharding).  cache_seq may map
+    to 'data' for long-context cells."""
+    if cfg.attn_type == "mla":
+        return {"ckv": ("batch", "cache_seq", "kv_lora"),
+                "krope": ("batch", "cache_seq", None)}
+    return {"k": ("batch", "cache_seq", "kv_heads", None),
+            "v": ("batch", "cache_seq", "kv_heads", None)}
+
+
+def attention_decode(params, cfg, x, cache, position):
+    """One-token decode against a populated cache.
+
+    x: (b, 1, d); position: scalar int32 — index of the new token.
+    Returns (out, new_cache).  SWA writes into a ring slot (position % window).
+    """
+    b = x.shape[0]
+    H, KV, hd = cfg.n_heads, cfg.n_kv, cfg.d_head
+    q, k_new, v_new = _project_qkv(params, cfg, x)
+    pos_arr = jnp.full((b, 1), position, jnp.int32)
+    q = apply_rope(q, pos_arr, cfg.rope_theta)
+    k_new = apply_rope(k_new, pos_arr, cfg.rope_theta)
+
+    if cfg.attn_type == "swa":
+        slot = position % cfg.window
+    else:
+        slot = position
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new, (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new, (0, slot, 0, 0))
+    new_cache = {"k": k, "v": v}
+
+    S = k.shape[1]
+    if cfg.attn_type == "swa":
+        # ring buffer: slot i holds absolute position p satisfying p % window == i
+        # and p in (position-window, position]
+        idx = jnp.arange(S)
+        base = position - (position % cfg.window)
+        k_pos = jnp.where(idx <= (position % cfg.window), base + idx, base - cfg.window + idx)
+        valid = (k_pos >= 0) & (k_pos > position - cfg.window) & (k_pos <= position)
+    else:
+        k_pos = jnp.arange(S)
+        valid = k_pos <= position
+
+    # expanded-KV formulation: q stays (b,1,H,d) with H sharded over 'model';
+    # expanding k/v reads only this shard's kv heads (no cross-shard reshape)
+    kf = _expand_kv(k, H)
+    vf = _expand_kv(v, H)
+    logits = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32),
+                        kf.astype(jnp.float32)) / math.sqrt(hd)
+    logits = jnp.where(valid[None, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", probs, vf.astype(jnp.float32)).astype(x.dtype)
+    return dense(params["wo"], out, "bshe,hed->bsd"), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2): latent KV compression
+# ---------------------------------------------------------------------------
+
+
+def mla_train(params, cfg, x, positions, return_kv=False):
+    m = cfg.mla
+    b, s, _ = x.shape
+    H = cfg.n_heads
+    q = dense(params["wq"], x, "bsd,dhe->bshe", waxes=("embed", "heads", None))
+    q_nope, q_rope = jnp.split(q, [m.qk_nope], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv = dense(params["wkv_down"], x, "bsd,de->bse", waxes=("embed", "kv_lora"))
+    ckv, k_rope = jnp.split(kv, [m.kv_lora], axis=-1)
+    ckv = rms_norm(params["kv_norm"], ckv, cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
+
+    k_nope = dense(params["wk_up"], ckv, "bse,ehn->bshn", waxes=("kv_lora", "heads", None))
+    v = dense(params["wv_up"], ckv, "bse,ehn->bshn", waxes=("kv_lora", "heads", None))
+    k_nope = constrain(k_nope, ("batch", "kv_seq", "heads_act", None))
+    v = constrain(v, ("batch", "kv_seq", "heads_act", None))
+
+    # fold the shared rope key into the per-head key: streaming attention
+    # over concat([nope, rope]) dims == the two-term MLA logit sum
+    q_cat = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_cat = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  k_nope.shape[:3] + (m.qk_rope,))], axis=-1)
+    scale = 1.0 / math.sqrt(m.qk_nope + m.qk_rope)
+    pos = jnp.arange(s, dtype=jnp.int32)
+    out = _mha_streaming(q_cat, k_cat, v, pos, pos, scale)
+    y = dense(params["wo"], out, "bshe,hed->bsd", waxes=("heads", None, "embed"))
+    if return_kv:
+        return y, {"ckv": ckv, "krope": k_rope}
+    return y
+
+
+def mla_decode(params, cfg, x, cache, position):
+    """Absorbed-matrix MLA decode: scores & values in the 512-dim latent space.
+
+    The cache holds (ckv, k_rope) only — the paper's early-reduction insight
+    applied to the KV cache: compress *before* it hits memory/interconnect.
+    """
+    m = cfg.mla
+    b = x.shape[0]
+    H = cfg.n_heads
+    q = dense(params["wq"], x, "bsd,dhe->bshe")
+    q_nope, q_rope = jnp.split(q, [m.qk_nope], axis=-1)
+    pos_arr = jnp.full((b, 1), position, jnp.int32)
+    q_rope = apply_rope(q_rope, pos_arr, cfg.rope_theta)
+
+    kv = dense(params["wkv_down"], x, "bsd,de->bse")
+    ckv_new, k_rope_new = jnp.split(kv, [m.kv_lora], axis=-1)
+    ckv_new = rms_norm(params["kv_norm"], ckv_new, cfg.norm_eps)
+    k_rope_new = apply_rope(k_rope_new[:, :, None, :], pos_arr, cfg.rope_theta)[:, :, 0, :]
+
+    ckv = jax.lax.dynamic_update_slice(cache["ckv"], ckv_new, (0, position, 0))
+    krope = jax.lax.dynamic_update_slice(cache["krope"], k_rope_new, (0, position, 0))
+    new_cache = {"ckv": ckv, "krope": krope}
+
+    # absorb W_uk into the query: q_lat (b,1,h,kv_lora)
+    q_lat = jnp.einsum("bshn,ehn->bshe", q_nope, params["wk_up"],
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+    scale = 1.0 / math.sqrt(m.qk_nope + m.qk_rope)
+    logits = jnp.einsum("bshe,bte->bhst", q_lat, ckv,
+                        preferred_element_type=jnp.float32)
+    logits += jnp.einsum("bshr,btr->bhst", q_rope, krope,
+                         preferred_element_type=jnp.float32)
+    S = ckv.shape[1]
+    valid = jnp.arange(S) <= position
+    logits = jnp.where(valid[None, None, None], logits * scale, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    # values in latent space, then up-project once per token
+    o_lat = jnp.einsum("bhst,bte->bshe", probs, ckv.astype(jnp.float32),
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+    out = jnp.einsum("bshe,ehn->bshn", o_lat, params["wv_up"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    return dense(params["wo"], out, "bshe,hed->bsd"), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Cross attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+
+def cross_attn_specs(cfg) -> dict:
+    d, H, hd = cfg.d_model, cfg.n_heads, cfg.d_head
+    dt = cfg.param_dtype
+    return {
+        "wq": spec((d, H, hd), ("embed", "heads", None), dtype=dt),
+        "wk": spec((d, H, hd), ("embed", "heads", None), dtype=dt),
+        "wv": spec((d, H, hd), ("embed", "heads", None), dtype=dt),
+        "wo": spec((H, hd, d), ("heads", None, "embed"), dtype=dt),
+    }
+
+
+def cross_attention(params, cfg, x, enc_out):
+    """x: (b, s, d) queries; enc_out: (b, t, d) keys/values (no mask)."""
+    b, s, _ = x.shape
+    q = dense(params["wq"], x, "bsd,dhe->bshe")
+    k = dense(params["wk"], enc_out, "btd,dhe->bthe")
+    v = dense(params["wv"], enc_out, "btd,dhe->bthe")
+    logits = jnp.einsum("bshe,bthe->bhst", q, k, preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits / math.sqrt(cfg.d_head), axis=-1)
+    out = jnp.einsum("bhst,bthe->bshe", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32).astype(v.dtype)
+    return dense(params["wo"], out, "bshe,hed->bsd")
+
+
+def bidir_attention(params, cfg, x):
+    """Encoder self-attention (no mask) — whisper encoder."""
+    b, s, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv, cfg.d_head
+    q, k, v = _project_qkv(params, cfg, x)
+    g = H // KV
+    q = q.reshape(b, s, KV, g, hd)
+    mask = jnp.ones((s, s), bool)
+    out = _mha(q, k, v, mask, 1.0 / math.sqrt(hd))
+    return dense(params["wo"], out.reshape(b, s, H, hd), "bshe,hed->bsd")

@@ -1,0 +1,271 @@
+"""Parameter specs and elementary layers (pure JAX, pytree params).
+
+No flax/haiku in this environment, so the framework carries its own tiny
+module system:
+
+* a **spec tree** mirrors the parameter pytree; each leaf is a
+  :class:`ParamSpec` (shape, logical axes, initializer, dtype).  From one
+  spec tree we derive (a) initialized params, (b) NamedShardings for the
+  active mesh/rules, (c) ShapeDtypeStructs for the dry-run — so the three
+  never drift apart.
+* apply-functions are free functions taking the param subtree first.
+
+Matmuls run in the param dtype (bf16 on the TPU target) with f32
+accumulation via ``preferred_element_type`` — MXU semantics.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.axes import ShardingContext, constrain, current_context
+
+
+# ---------------------------------------------------------------------------
+# Param specs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple
+    axes: tuple                       # logical axis names, len == len(shape)
+    init: str = "normal"              # normal | zeros | ones | scaled
+    scale: float = 1.0                # stddev multiplier for normal/scaled
+    dtype: jnp.dtype = jnp.bfloat16
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"axes {self.axes} vs shape {self.shape}")
+
+
+def spec(shape, axes, init="normal", scale=1.0, dtype=jnp.bfloat16):
+    return ParamSpec(tuple(shape), tuple(axes), init, scale, jnp.dtype(dtype))
+
+
+def _init_leaf(s: ParamSpec, key) -> jax.Array:
+    if s.init == "zeros":
+        return jnp.zeros(s.shape, s.dtype)
+    if s.init == "ones":
+        return jnp.ones(s.shape, s.dtype)
+    if s.init == "normal":
+        fan_in = s.shape[0] if s.shape else 1
+        std = s.scale / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(key, s.shape, jnp.float32) * std).astype(s.dtype)
+    if s.init == "scaled":  # raw stddev = scale
+        return (jax.random.normal(key, s.shape, jnp.float32) * s.scale).astype(s.dtype)
+    raise ValueError(s.init)
+
+
+def is_spec(x):
+    return isinstance(x, ParamSpec)
+
+
+def init_params(specs, key):
+    """Materialize a spec tree deterministically (fold_in by flattened path)."""
+    leaves, treedef = jax.tree_util.tree_flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    out = [_init_leaf(s, k) for s, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def abstract_params(specs, ctx: Optional[ShardingContext] = None):
+    """ShapeDtypeStructs (with shardings if ctx given) — dry-run stand-ins."""
+    def leaf(s: ParamSpec):
+        if ctx is None:
+            return jax.ShapeDtypeStruct(s.shape, s.dtype)
+        return jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=ctx.named_sharding(s.axes, s.shape)
+        )
+    return jax.tree_util.tree_map(leaf, specs, is_leaf=is_spec)
+
+
+def param_shardings(specs, ctx: ShardingContext):
+    return jax.tree_util.tree_map(
+        lambda s: ctx.named_sharding(s.axes, s.shape), specs, is_leaf=is_spec
+    )
+
+
+def param_count(specs) -> int:
+    leaves = jax.tree_util.tree_leaves(specs, is_leaf=is_spec)
+    return sum(int(math.prod(s.shape)) for s in leaves)
+
+
+def stack_specs(specs, n: int, axis_name: str = "stack"):
+    """Prepend a scanned-layer dimension to every leaf (for lax.scan stacks)."""
+    return jax.tree_util.tree_map(
+        lambda s: ParamSpec((n,) + s.shape, (axis_name,) + s.axes, s.init, s.scale, s.dtype),
+        specs,
+        is_leaf=is_spec,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Elementary ops
+# ---------------------------------------------------------------------------
+
+
+def dense(w: jax.Array, x: jax.Array, eq: str, waxes: Optional[tuple] = None) -> jax.Array:
+    """einsum with f32 accumulation, result cast back to x.dtype.
+
+    Under a sharding context whose rules set ``manual_fsdp`` (the fsdp
+    plan), and given the weight's logical axes ``waxes``, the einsum runs
+    inside a *partial-manual* shard_map over the 'model' axis: the weight
+    shard is explicitly all-gathered (backward: psum_scatter — ZeRO
+    semantics by construction).  We adopted this after measuring that the
+    auto-partitioner falls into involuntary-full-rematerialization on the
+    dW dot of FSDP-sharded weights (46 TB activation gathers; see
+    EXPERIMENTS.md §Perf iteration 3) — manual collectives make the plan's
+    cost structural rather than propagation-dependent.
+
+    Activations are assumed (batch, seq, ...) with seq sharded over 'model'
+    per the fsdp plan; everything on other mesh axes stays automatic.
+    """
+    from repro.parallel.axes import current_context  # local: avoid cycle
+
+    ctx = current_context()
+    if (
+        ctx is None
+        or waxes is None
+        or not ctx.rules.get("manual_fsdp")
+        or "model" not in ctx.mesh.axis_names
+    ):
+        y = jnp.einsum(eq, x, w, preferred_element_type=jnp.float32)
+        return y.astype(x.dtype)
+
+    from jax.sharding import PartitionSpec as P
+
+    msize = ctx.mesh.shape["model"]
+    wspec = ctx.resolve_for_shape(waxes, w.shape)
+    gather_dims = [i for i, e in enumerate(tuple(wspec)) if e == "model"]
+    seq_ok = x.ndim >= 2 and x.shape[1] % msize == 0
+    if not gather_dims or not seq_ok:
+        y = jnp.einsum(eq, x, w, preferred_element_type=jnp.float32)
+        return y.astype(x.dtype)
+    gdim = gather_dims[0]
+
+    out_sub = eq.split("->")[1]
+    out_ndim = x.ndim if "..." in eq else len(out_sub)
+
+    # custom_vjp around the weight gather: backward reduce-scatters the
+    # weight cotangent in f32 — XLA CPU's AllReducePromotion pass CHECK-fails
+    # cloning 16-bit reduce-scatters (measured; EXPERIMENTS.md §Perf iter 3),
+    # and f32 gradient reduction is what we want numerically anyway.
+    @jax.custom_vjp
+    def gather_w(w_shard):
+        return jax.lax.all_gather(w_shard, "model", axis=gdim, tiled=True)
+
+    def gather_w_fwd(w_shard):
+        return gather_w(w_shard), None
+
+    def gather_w_bwd(_, ct):
+        rs = jax.lax.psum_scatter(ct.astype(jnp.float32), "model",
+                                  scatter_dimension=gdim, tiled=True)
+        return (rs.astype(w.dtype),)
+
+    gather_w.defvjp(gather_w_fwd, gather_w_bwd)
+
+    def body(x_in, w_shard):
+        w_full = gather_w(w_shard)
+        y = jnp.einsum(eq, x_in, w_full, preferred_element_type=jnp.float32)
+        return y.astype(x_in.dtype)
+
+    x_spec = P(*([None, "model"] + [None] * (x.ndim - 2)))
+    w_spec = P(*[("model" if i == gdim else None) for i in range(w.ndim)])
+    y_spec = P(*([None, "model"] + [None] * (out_ndim - 2)))
+    # ambient mesh when nested inside the pod-manual compressed-gradient
+    # region (axis_types must match); concrete mesh otherwise
+    from repro.parallel.axes import shard_map_mesh
+    fn = jax.shard_map(
+        body, mesh=shard_map_mesh(ctx), in_specs=(x_spec, w_spec),
+        out_specs=y_spec, axis_names=frozenset({"model"}), check_vma=False,
+    )
+    return fn(x, w)
+
+
+def rms_norm(scale: jax.Array, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(scale, bias, x, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def swiglu(w_gate, w_up, w_down, x):
+    """LLaMA-style gated MLP.  x: (..., d_model)."""
+    g = dense(w_gate, x, "...d,df->...f", waxes=("embed", "mlp"))
+    u = dense(w_up, x, "...d,df->...f", waxes=("embed", "mlp"))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    h = constrain(h, ("batch", "seq", "mlp_act"))
+    return dense(w_down, h, "...f,fd->...d", waxes=("mlp", "embed"))
+
+
+def gelu_mlp(w_fc, b_fc, w_proj, b_proj, x):
+    """GPT-style 2-matrix MLP (granite / whisper)."""
+    h = dense(w_fc, x, "...d,df->...f", waxes=("embed", "mlp")) + b_fc.astype(x.dtype)
+    h = jax.nn.gelu(h.astype(jnp.float32), approximate=True).astype(x.dtype)
+    h = constrain(h, ("batch", "seq", "mlp_act"))
+    return dense(w_proj, h, "...f,fd->...d", waxes=("mlp", "embed")) + b_proj.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding (llama-style, half-dim pairing)
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(d_head: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """x: (..., seq, heads, d_head); positions: broadcastable to (..., seq)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                        # (d/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, d/2)
+    cos = jnp.cos(angles)[..., None, :]                 # (..., seq, 1, d/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d_model: int) -> jax.Array:
+    """Whisper-style fixed sinusoidal embeddings."""
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d_model // 2, dtype=jnp.float32)[None, :]
+    inv = jnp.exp(-math.log(10000.0) * dim / (d_model // 2 - 1))
+    ang = pos * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embed_spec(vocab: int, d_model: int, dtype=jnp.bfloat16):
+    return {
+        "embedding": spec((vocab, d_model), ("vocab", "embed"), "scaled", 0.02, dtype),
+    }
+
+
+def embed(params, tokens: jax.Array) -> jax.Array:
+    x = jnp.take(params["embedding"], tokens, axis=0)
+    return constrain(x, ("batch", "seq", "embed_act"))
+
+
+def unembed(params, x: jax.Array) -> jax.Array:
+    logits = dense(params["embedding"], x, "...d,vd->...v", waxes=("vocab", "embed"))
+    return constrain(logits, ("batch", "seq", "vocab_act"))

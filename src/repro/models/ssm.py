@@ -1,0 +1,273 @@
+"""Attention-free sequence mixers: RWKV6 (Finch) and Mamba (for Jamba).
+
+These are the assignment's sub-quadratic families — and, in the paper's
+vocabulary, the extreme early-data-reduction designs: all history is
+compressed into O(1) recurrent state, so the long-context "offload payload"
+(KV cache) disappears entirely (DESIGN.md §4).
+
+Train path: `jax.lax.scan` over time (carries in f32).  Decode path: a
+single-step state update.  The chunked TPU kernel for RWKV6 lives in
+`repro.kernels.rwkv_scan`; this module is also its reference semantics.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense, rms_norm, spec
+from repro.parallel.axes import constrain
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 time-mix + channel-mix
+# ---------------------------------------------------------------------------
+
+RWKV_HEAD_DIM = 64
+RWKV_LORA_MIX = 32
+RWKV_LORA_DECAY = 64
+
+
+def rwkv_time_mix_specs(cfg) -> dict:
+    d, dt = cfg.d_model, cfg.param_dtype
+    H = d // RWKV_HEAD_DIM
+    return {
+        "mu_base": spec((5, d), (None, "embed_nofsdp"), "zeros", dtype=dt),
+        "maa_w1": spec((d, 5 * RWKV_LORA_MIX), ("embed", None), dtype=dt),
+        "maa_w2": spec((5, RWKV_LORA_MIX, d), (None, None, "embed"), dtype=dt),
+        "decay_base": spec((d,), ("embed_nofsdp",), "zeros", dtype=jnp.float32),
+        "decay_w1": spec((d, RWKV_LORA_DECAY), ("embed", None), dtype=dt),
+        "decay_w2": spec((RWKV_LORA_DECAY, d), (None, "embed"), dtype=dt),
+        "bonus": spec((H, RWKV_HEAD_DIM), ("heads", None), "zeros", dtype=jnp.float32),
+        "wr": spec((d, d), ("embed", "heads"), dtype=dt),
+        "wk": spec((d, d), ("embed", "heads"), dtype=dt),
+        "wv": spec((d, d), ("embed", "heads"), dtype=dt),
+        "wg": spec((d, d), ("embed", "heads"), dtype=dt),
+        "wo": spec((d, d), ("heads", "embed"), dtype=dt),
+        "ln_scale": spec((d,), ("embed_nofsdp",), "ones", dtype=dt),
+    }
+
+
+def _rwkv_mix_inputs(params, x, x_prev):
+    """Data-dependent token-shift interpolation (RWKV6's defining feature)."""
+    xx = x_prev - x
+    base = x + xx * params["mu_base"][0].astype(x.dtype)
+    lora = jnp.tanh(dense(params["maa_w1"], base, "...d,de->...e"))
+    lora = lora.reshape(*lora.shape[:-1], 5, RWKV_LORA_MIX)
+    deltas = jnp.einsum("...fe,fed->...fd", lora.astype(jnp.float32),
+                        params["maa_w2"].astype(jnp.float32)).astype(x.dtype)
+    mixed = []
+    for i in range(5):
+        mu = params["mu_base"][i].astype(x.dtype) + deltas[..., i, :]
+        mixed.append(x + xx * mu)
+    return mixed  # [xw, xk, xv, xr, xg]
+
+
+def _rwkv_decay(params, xw):
+    lora = jnp.tanh(dense(params["decay_w1"], xw, "...d,de->...e"))
+    dd = dense(params["decay_w2"], lora, "...e,ed->...d").astype(jnp.float32)
+    return jnp.exp(-jnp.exp(params["decay_base"] + dd))      # in (0,1)
+
+
+def rwkv_state_init(cfg, batch: int):
+    d = cfg.d_model
+    H = d // RWKV_HEAD_DIM
+    return {
+        "x_prev": jnp.zeros((batch, d), cfg.param_dtype),
+        "wkv": jnp.zeros((batch, H, RWKV_HEAD_DIM, RWKV_HEAD_DIM), jnp.float32),
+        "x_prev_cm": jnp.zeros((batch, d), cfg.param_dtype),
+    }
+
+
+def rwkv_state_axes():
+    return {"x_prev": ("batch", None), "wkv": ("batch", "heads_act", None, None),
+            "x_prev_cm": ("batch", None)}
+
+
+def _wkv_step(state, r, k, v, w, u):
+    """One recurrence step.  r,k,v,w: (b,H,K); state: (b,H,K,V) f32."""
+    kv = k[..., :, None] * v[..., None, :]                  # (b,H,K,V)
+    out = jnp.einsum("bhk,bhkv->bhv", r, state + u[..., :, None] * kv)
+    new_state = w[..., :, None] * state + kv
+    return new_state, out
+
+
+def rwkv_time_mix(params, cfg, x, state=None):
+    """x: (b, s, d).  Returns (out, new_state).  Scan over time."""
+    b, s, d = x.shape
+    H = d // RWKV_HEAD_DIM
+    if state is None:
+        state = rwkv_state_init(cfg, b)
+    x_prev_seq = jnp.concatenate([state["x_prev"][:, None], x[:, :-1]], axis=1)
+    xw, xk, xv, xr, xg = _rwkv_mix_inputs(params, x, x_prev_seq)
+
+    r = dense(params["wr"], xr, "bsd,de->bse", waxes=("embed", "heads")).reshape(b, s, H, RWKV_HEAD_DIM)
+    k = dense(params["wk"], xk, "bsd,de->bse", waxes=("embed", "heads")).reshape(b, s, H, RWKV_HEAD_DIM)
+    v = dense(params["wv"], xv, "bsd,de->bse", waxes=("embed", "heads")).reshape(b, s, H, RWKV_HEAD_DIM)
+    g = dense(params["wg"], xg, "bsd,de->bse", waxes=("embed", "heads"))
+    w = _rwkv_decay(params, xw).reshape(b, s, H, RWKV_HEAD_DIM)
+    u = params["bonus"]
+
+    r32, k32, v32 = (t.astype(jnp.float32) for t in (r, k, v))
+
+    def step(carry, inp):
+        rt, kt, vt, wt = inp
+        new, out = _wkv_step(carry, rt, kt, vt, wt, u)
+        return new, out
+
+    seq_first = lambda t: jnp.moveaxis(t, 1, 0)
+    new_wkv, outs = jax.lax.scan(
+        step, state["wkv"], (seq_first(r32), seq_first(k32), seq_first(v32), seq_first(w))
+    )
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, s, d)         # (b,s,H*V)
+
+    # per-head group norm, gate, project
+    out = out.reshape(b, s, H, RWKV_HEAD_DIM)
+    mu = jnp.mean(out, axis=-1, keepdims=True)
+    var = jnp.var(out, axis=-1, keepdims=True)
+    out = ((out - mu) * jax.lax.rsqrt(var + 64e-5)).reshape(b, s, d)
+    out = out * params["ln_scale"].astype(jnp.float32)
+    out = out.astype(x.dtype) * jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)
+    y = dense(params["wo"], out, "bsd,de->bse", waxes=("heads", "embed"))
+
+    new_state = dict(state, x_prev=x[:, -1], wkv=new_wkv)
+    return y, new_state
+
+
+def rwkv_channel_mix_specs(cfg) -> dict:
+    d, f, dt = cfg.d_model, cfg.d_ff, cfg.param_dtype
+    return {
+        "mu_k": spec((d,), ("embed_nofsdp",), "zeros", dtype=dt),
+        "mu_r": spec((d,), ("embed_nofsdp",), "zeros", dtype=dt),
+        "wk": spec((d, f), ("embed", "mlp"), dtype=dt),
+        "wv": spec((f, d), ("mlp", "embed"), dtype=dt),
+        "wr": spec((d, d), ("embed", "heads"), dtype=dt),
+    }
+
+
+def rwkv_channel_mix(params, cfg, x, x_prev_last=None):
+    """RWKV6 channel-mix (squared-relu FFN with token shift)."""
+    b, s, d = x.shape
+    if x_prev_last is None:
+        x_prev_last = jnp.zeros((b, d), x.dtype)
+    x_prev = jnp.concatenate([x_prev_last[:, None], x[:, :-1]], axis=1)
+    xx = x_prev - x
+    xk = x + xx * params["mu_k"].astype(x.dtype)
+    xr = x + xx * params["mu_r"].astype(x.dtype)
+    k = dense(params["wk"], xk, "bsd,df->bsf", waxes=("embed", "mlp"))
+    k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(x.dtype)
+    k = constrain(k, ("batch", "seq", "mlp_act"))
+    kv = dense(params["wv"], k, "bsf,fd->bsd", waxes=("mlp", "embed"))
+    r = jax.nn.sigmoid(dense(params["wr"], xr, "bsd,de->bse", waxes=("embed", "heads")).astype(jnp.float32))
+    return r.astype(x.dtype) * kv, x[:, -1]
+
+
+# ---------------------------------------------------------------------------
+# Mamba (selective SSM) — Jamba's mixer
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaConfig:
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 256
+
+
+def mamba_specs(cfg, m: MambaConfig) -> dict:
+    d, dt = cfg.d_model, cfg.param_dtype
+    di = m.expand * d
+    return {
+        "in_proj": spec((d, 2 * di), ("embed", "mlp"), dtype=dt),
+        "conv_w": spec((m.d_conv, di), ("conv", "mlp"), scale=1.0, dtype=dt),
+        "conv_b": spec((di,), ("mlp",), "zeros", dtype=dt),
+        "x_proj": spec((di, m.dt_rank + 2 * m.d_state), ("mlp", None), dtype=dt),
+        "dt_proj": spec((m.dt_rank, di), ("dt_rank", "mlp"), dtype=dt),
+        "dt_bias": spec((di,), ("mlp",), "zeros", dtype=jnp.float32),
+        "A_log": spec((di, m.d_state), ("mlp", "state"), "zeros", dtype=jnp.float32),
+        "D": spec((di,), ("mlp",), "ones", dtype=jnp.float32),
+        "out_proj": spec((di, d), ("mlp", "embed"), dtype=dt),
+        # Jamba adds RMS norms on dt/B/C
+        "dt_norm": spec((m.dt_rank,), ("dt_rank",), "ones", dtype=dt),
+        "b_norm": spec((m.d_state,), ("state",), "ones", dtype=dt),
+        "c_norm": spec((m.d_state,), ("state",), "ones", dtype=dt),
+    }
+
+
+def mamba_state_init(cfg, m: MambaConfig, batch: int):
+    di = m.expand * cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, m.d_conv - 1, di), cfg.param_dtype),
+        "ssm": jnp.zeros((batch, di, m.d_state), jnp.float32),
+    }
+
+
+def mamba_state_axes():
+    return {"conv": ("batch", None, "mlp_act"), "ssm": ("batch", "mlp_act", "state")}
+
+
+def _mamba_scan(delta, A, Bx, C, h0=None):
+    """h_t = exp(delta_t A) h_{t-1} + Bx_t ; y_t = C_t . h_t
+    delta: (b,s,di)  A: (di,n)  Bx: (b,s,di,n)  C: (b,s,n) -> y (b,s,di)."""
+    dA = jnp.exp(delta[..., None] * A)                      # (b,s,di,n)
+
+    def step(h, inp):
+        dA_t, Bx_t, C_t = inp
+        h = dA_t * h + Bx_t
+        y = jnp.einsum("bdn,bn->bd", h, C_t)
+        return h, y
+
+    seq_first = lambda t: jnp.moveaxis(t, 1, 0)
+    if h0 is None:
+        h0 = jnp.zeros(dA.shape[:1] + dA.shape[2:], jnp.float32)
+    hT, ys = jax.lax.scan(step, h0, (seq_first(dA), seq_first(Bx), seq_first(C)))
+    return jnp.moveaxis(ys, 0, 1), hT
+
+
+def mamba_mixer(params, cfg, m: MambaConfig, x, state=None):
+    """x: (b, s, d) -> (out, new_state)."""
+    b, s, d = x.shape
+    di = m.expand * d
+    xz = dense(params["in_proj"], x, "bsd,de->bse", waxes=("embed", "mlp"))
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi = constrain(xi, ("batch", "seq", "mlp_act"))
+
+    # depthwise causal conv over seq, carrying conv state for decode parity
+    if state is not None:
+        pad = state["conv"]
+    else:
+        pad = jnp.zeros((b, m.d_conv - 1, di), xi.dtype)
+    xpad = jnp.concatenate([pad, xi], axis=1)
+    conv_w = params["conv_w"].astype(jnp.float32)           # (w, di)
+    xc = sum(
+        xpad[:, i : i + s].astype(jnp.float32) * conv_w[i]
+        for i in range(m.d_conv)
+    )
+    xc = jax.nn.silu(xc + params["conv_b"].astype(jnp.float32)).astype(x.dtype)
+
+    proj = dense(params["x_proj"], xc, "bse,ef->bsf")
+    dt, B, C = jnp.split(proj, [m.dt_rank, m.dt_rank + m.d_state], axis=-1)
+    dt = rms_norm(params["dt_norm"], dt, cfg.norm_eps)
+    B = rms_norm(params["b_norm"], B, cfg.norm_eps).astype(jnp.float32)
+    C = rms_norm(params["c_norm"], C, cfg.norm_eps).astype(jnp.float32)
+    delta = jax.nn.softplus(
+        dense(params["dt_proj"], dt, "bsr,re->bse").astype(jnp.float32)
+        + params["dt_bias"]
+    )                                                        # (b,s,di)
+    A = -jnp.exp(params["A_log"])                            # (di,n)
+    Bx = delta[..., None] * B[:, :, None, :] * xc.astype(jnp.float32)[..., None]
+    h0 = state["ssm"] if state is not None else None
+    ys, hT = _mamba_scan(delta, A, Bx, C, h0)
+    y = ys + params["D"] * xc.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = dense(params["out_proj"], y, "bse,ed->bsd", waxes=("mlp", "embed"))
+
+    new_state = {
+        "conv": xpad[:, -(m.d_conv - 1):] if m.d_conv > 1 else pad,
+        "ssm": hT,
+    }
+    return out, new_state

@@ -1,0 +1,695 @@
+"""Model assembly: one config schema, ten architectures, scan-over-layers.
+
+Design rules (framework-scale, not demo-scale):
+
+* **Scan over layer periods.**  Layers are grouped into the smallest
+  repeating *period* of layer kinds (Jamba's attn/mamba 1:7 interleave with
+  MoE every other layer has period 8; homogeneous models have period 1).
+  Parameters are stacked over periods and the period body is a single
+  `lax.scan` step — HLO size is O(period), not O(depth), which is what
+  makes 88-layer granite compile fast and keeps the dry-run tractable.
+* **Remat at the period boundary** (`jax.checkpoint`) — full recompute in
+  backward, activation memory O(period) not O(depth).
+* **Heterogeneous prefixes** (DeepSeek's first dense layer) are unscanned
+  standalone layers before the scanned stack.
+* **Decode carries cache stacks**: the same scan runs with per-period cache
+  slices as scan xs/ys.
+
+The mixer/MLP kinds combine freely: attention (full/SWA/MLA), RWKV6
+time-mix, Mamba; SwiGLU / GELU MLP / MoE / RWKV channel-mix — that's what
+lets ten architectures share one assembly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models import ssm
+from repro.models.layers import (
+    dense,
+    embed,
+    embed_spec,
+    gelu_mlp,
+    init_params,
+    layer_norm,
+    param_count,
+    rms_norm,
+    sinusoidal_positions,
+    spec,
+    stack_specs,
+    swiglu,
+    unembed,
+)
+from repro.parallel.axes import constrain
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    kv_lora: int = 512
+    qk_nope: int = 128
+    qk_rope: int = 64
+    v_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                     # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    # attention
+    attn_type: str = "full"         # full | swa | mla
+    window: int = 4096
+    rope_theta: float = 1e4
+    attn_bias: bool = False
+    qk_norm: bool = False
+    mla: Optional[MLAConfig] = None
+    # mixer pattern (ssm / hybrid)
+    mixer: str = "attn"             # attn | rwkv | mamba
+    attn_every: int = 0             # hybrid: attention where i % attn_every == attn_offset
+    attn_offset: int = 0
+    mamba: Optional[ssm.MambaConfig] = None
+    # mlp pattern
+    mlp_type: str = "swiglu"        # swiglu | gelu | rwkv_cm
+    moe: Optional[moe_lib.MoEConfig] = None
+    moe_every: int = 1              # MoE where i % moe_every == moe_offset (if moe set)
+    moe_offset: int = 0
+    first_dense: int = 0            # leading dense-MLP layers (DeepSeek: 1)
+    # encoder-decoder (whisper)
+    enc_layers: int = 0
+    enc_seq: int = 1500
+    # misc
+    norm_type: str = "rms"          # rms | ln
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    param_dtype: object = jnp.bfloat16
+    remat: bool = True
+    # assignment metadata
+    sub_quadratic: bool = False     # may run long_500k
+    source: str = ""
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.enc_layers > 0
+
+
+# ---------------------------------------------------------------------------
+# Layer-kind resolution
+# ---------------------------------------------------------------------------
+
+
+def layer_kind(cfg: ModelConfig, i: int) -> tuple:
+    """(mixer, mlp) kind of decoder layer ``i``."""
+    if cfg.mixer == "rwkv":
+        return ("rwkv", "rwkv_cm")
+    if cfg.mixer == "mamba":
+        # hybrid: attention islands in a mamba sea (Jamba 1:7)
+        is_attn = bool(cfg.attn_every) and (i % cfg.attn_every == cfg.attn_offset)
+        mixer = "attn" if is_attn else "mamba"
+    else:
+        mixer = "attn"
+    mlp = cfg.mlp_type
+    if cfg.moe is not None and i >= cfg.first_dense and i % cfg.moe_every == cfg.moe_offset:
+        mlp = "moe"
+    return (mixer, mlp)
+
+
+def layer_kinds(cfg: ModelConfig) -> list:
+    return [layer_kind(cfg, i) for i in range(cfg.n_layers)]
+
+
+def find_period(kinds: list) -> int:
+    n = len(kinds)
+    for p in range(1, n + 1):
+        if n % p == 0 and kinds == kinds[:p] * (n // p):
+            return p
+    return n
+
+
+# ---------------------------------------------------------------------------
+# Single-layer specs / forward
+# ---------------------------------------------------------------------------
+
+
+def _norm_specs(cfg):
+    d, dt = cfg.d_model, cfg.param_dtype
+    if cfg.norm_type == "ln":
+        return {"scale": spec((d,), ("embed_nofsdp",), "ones", dtype=dt),
+                "bias": spec((d,), ("embed_nofsdp",), "zeros", dtype=dt)}
+    return {"scale": spec((d,), ("embed_nofsdp",), "ones", dtype=dt)}
+
+
+def _apply_norm(p, cfg, x):
+    if cfg.norm_type == "ln":
+        return layer_norm(p["scale"], p["bias"], x, cfg.norm_eps)
+    return rms_norm(p["scale"], x, cfg.norm_eps)
+
+
+def _mlp_specs(cfg, kind: str):
+    d, f, dt = cfg.d_model, cfg.d_ff, cfg.param_dtype
+    if kind == "moe":
+        return moe_lib.moe_specs(cfg, cfg.moe)
+    if kind == "swiglu":
+        return {"w_gate": spec((d, f), ("embed", "mlp"), dtype=dt),
+                "w_up": spec((d, f), ("embed", "mlp"), dtype=dt),
+                "w_down": spec((f, d), ("mlp", "embed"), dtype=dt)}
+    if kind == "gelu":
+        return {"w_fc": spec((d, f), ("embed", "mlp"), dtype=dt),
+                "b_fc": spec((f,), ("mlp",), "zeros", dtype=dt),
+                "w_proj": spec((f, d), ("mlp", "embed"), dtype=dt),
+                "b_proj": spec((d,), ("embed_nofsdp",), "zeros", dtype=dt)}
+    if kind == "rwkv_cm":
+        return ssm.rwkv_channel_mix_specs(cfg)
+    raise ValueError(kind)
+
+
+def _mixer_specs(cfg, kind: str, cross: bool = False):
+    if kind in ("attn", "bidir"):
+        out = attn.attn_specs(cfg)
+        if cross:
+            out_cross = attn.cross_attn_specs(cfg)
+            return out, out_cross
+        return out
+    if kind == "mla":
+        return attn.attn_specs(cfg)
+    if kind == "rwkv":
+        return ssm.rwkv_time_mix_specs(cfg)
+    if kind == "mamba":
+        return ssm.mamba_specs(cfg, cfg.mamba)
+    raise ValueError(kind)
+
+
+def decoder_layer_specs(cfg, kind: tuple, cross: bool = False) -> dict:
+    mixer, mlp = kind
+    mixer_key = "mla" if (mixer == "attn" and cfg.attn_type == "mla") else mixer
+    out = {
+        "norm1": _norm_specs(cfg),
+        "mixer": _mixer_specs(cfg, mixer_key),
+        "norm2": _norm_specs(cfg),
+        "mlp": _mlp_specs(cfg, mlp),
+    }
+    if cross:
+        out["norm_cross"] = _norm_specs(cfg)
+        out["cross"] = attn.cross_attn_specs(cfg)
+    return out
+
+
+def _apply_mixer_train(p, cfg, kind: str, x, positions, state=None):
+    """Returns (out, new_state_or_None)."""
+    if kind == "attn":
+        if cfg.attn_type == "mla":
+            return attn.mla_train(p, cfg, x, positions), None
+        return attn.attention_train(p, cfg, x, positions), None
+    if kind == "rwkv":
+        st = None if state is None else {k: state[k] for k in ("x_prev", "wkv", "x_prev_cm")}
+        out, new = ssm.rwkv_time_mix(p, cfg, x, st)
+        return out, new
+    if kind == "mamba":
+        out, new = ssm.mamba_mixer(p, cfg, cfg.mamba, x, state)
+        return out, new
+    raise ValueError(kind)
+
+
+def _apply_mlp(p, cfg, kind: str, x, cm_state=None):
+    """Returns (out, aux_loss, new_cm_state)."""
+    if kind == "moe":
+        y, aux = moe_lib.moe_ffn(p, cfg, cfg.moe, x)
+        return y, aux, None
+    if kind == "swiglu":
+        return swiglu(p["w_gate"], p["w_up"], p["w_down"], x), 0.0, None
+    if kind == "gelu":
+        return gelu_mlp(p["w_fc"], p["b_fc"], p["w_proj"], p["b_proj"], x), 0.0, None
+    if kind == "rwkv_cm":
+        y, last = ssm.rwkv_channel_mix(p, cfg, x, cm_state)
+        return y, 0.0, last
+    raise ValueError(kind)
+
+
+def decoder_layer_train(p, cfg, kind: tuple, x, positions):
+    mixer, mlp = kind
+    h = _apply_norm(p["norm1"], cfg, x)
+    mix_out, _ = _apply_mixer_train(p["mixer"], cfg, mixer, h, positions)
+    x = x + mix_out
+    h = _apply_norm(p["norm2"], cfg, x)
+    mlp_out, aux, _ = _apply_mlp(p["mlp"], cfg, mlp, h)
+    x = x + mlp_out
+    x = constrain(x, ("batch", "seq", "embed_act"))
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# Decode-path per-layer
+# ---------------------------------------------------------------------------
+
+
+def layer_cache_init(cfg, kind: tuple, batch: int, max_seq: int):
+    mixer, _ = kind
+    if mixer == "attn":
+        return attn.init_cache(cfg, batch, max_seq)
+    if mixer == "rwkv":
+        return ssm.rwkv_state_init(cfg, batch)
+    if mixer == "mamba":
+        return ssm.mamba_state_init(cfg, cfg.mamba, batch)
+    raise ValueError(mixer)
+
+
+def layer_cache_axes(cfg, kind: tuple):
+    mixer, _ = kind
+    if mixer == "attn":
+        return attn.cache_specs(cfg, 0, 0)
+    if mixer == "rwkv":
+        return ssm.rwkv_state_axes()
+    if mixer == "mamba":
+        return ssm.mamba_state_axes()
+    raise ValueError(mixer)
+
+
+def decoder_layer_decode(p, cfg, kind: tuple, x, cache, position):
+    mixer, mlp = kind
+    h = _apply_norm(p["norm1"], cfg, x)
+    if mixer == "attn":
+        if cfg.attn_type == "mla":
+            mix_out, new_cache = attn.mla_decode(p["mixer"], cfg, h, cache, position)
+        else:
+            mix_out, new_cache = attn.attention_decode(p["mixer"], cfg, h, cache, position)
+    elif mixer == "rwkv":
+        mix_out, new_cache = ssm.rwkv_time_mix(p["mixer"], cfg, h, cache)
+    elif mixer == "mamba":
+        mix_out, new_cache = ssm.mamba_mixer(p["mixer"], cfg, cfg.mamba, h, cache)
+    else:
+        raise ValueError(mixer)
+    x = x + mix_out
+    h = _apply_norm(p["norm2"], cfg, x)
+    cm_state = cache.get("x_prev_cm") if mixer == "rwkv" else None
+    mlp_out, _, new_cm = _apply_mlp(p["mlp"], cfg, mlp, h, cm_state)
+    if mixer == "rwkv" and new_cm is not None:
+        new_cache = dict(new_cache, x_prev_cm=new_cm)
+    x = x + mlp_out
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# The Model
+# ---------------------------------------------------------------------------
+
+
+class Model:
+    """A configured architecture: specs, init, train loss, decode step."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.kinds = layer_kinds(cfg)
+        body = self.kinds[cfg.first_dense:]
+        self.period = find_period(body) if body else 1
+        self.n_periods = len(body) // self.period if body else 0
+        self.period_kinds = body[: self.period]
+
+    # -- specs ---------------------------------------------------------------
+    def specs(self) -> dict:
+        cfg = self.cfg
+        out = {"embed": embed_spec(cfg.vocab, cfg.d_model, cfg.param_dtype)}
+        if cfg.first_dense:
+            out["prefix"] = [
+                decoder_layer_specs(cfg, self.kinds[i]) for i in range(cfg.first_dense)
+            ]
+        if self.n_periods:
+            period_spec = {
+                f"sub{j}": decoder_layer_specs(cfg, k, cross=cfg.is_encdec)
+                for j, k in enumerate(self.period_kinds)
+            }
+            out["stack"] = stack_specs(period_spec, self.n_periods)
+        out["final_norm"] = _norm_specs(cfg)
+        if not cfg.tie_embeddings:
+            out["unembed"] = {
+                "w": spec((cfg.d_model, cfg.vocab), ("embed", "vocab"),
+                          "scaled", 0.02 / math.sqrt(cfg.d_model), dtype=cfg.param_dtype)
+            }
+        if cfg.is_encdec:
+            enc_layer = {
+                "norm1": _norm_specs(cfg),
+                "mixer": attn.attn_specs(cfg),
+                "norm2": _norm_specs(cfg),
+                "mlp": _mlp_specs(cfg, cfg.mlp_type),
+            }
+            out["enc_stack"] = stack_specs(enc_layer, cfg.enc_layers)
+            out["enc_final_norm"] = _norm_specs(cfg)
+        return out
+
+    def init(self, key) -> dict:
+        return init_params(self.specs(), key)
+
+    # -- parameter accounting --------------------------------------------
+    def n_params(self) -> int:
+        return param_count(self.specs())
+
+    def n_active_params(self) -> int:
+        """Per-token active params: routed experts count top_k/n_experts."""
+        cfg = self.cfg
+        specs = self.specs()
+
+        def count(tree, pred):
+            c = 0
+            leaves = jax.tree_util.tree_leaves_with_path(
+                tree, is_leaf=lambda x: hasattr(x, "shape") and hasattr(x, "axes"))
+            for path, leaf in leaves:
+                n = 1
+                for s in leaf.shape:
+                    n *= s
+                if pred(path, leaf):
+                    c += n
+            return c
+
+        total = count(specs, lambda p, l: True)
+        if cfg.moe is None:
+            return total
+
+        def is_routed_expert(path, leaf):
+            # routed expert weights carry an explicit n_experts dimension
+            body = leaf.shape[1:] if (leaf.axes and leaf.axes[0] == "stack") else leaf.shape
+            names = [str(getattr(k, "key", k)) for k in path]
+            return (len(body) == 3 and body[0] == cfg.moe.n_experts
+                    and any(n in ("w_gate", "w_up", "w_down") for n in names)
+                    and "shared" not in names)
+
+        routed = count(specs, is_routed_expert)
+        return total - routed + int(routed * cfg.moe.top_k / cfg.moe.n_experts)
+
+    # -- encoder -----------------------------------------------------------
+    def encode(self, params, enc_input):
+        """enc_input: (b, enc_seq, d_model) precomputed frame embeddings (stub
+        frontend per assignment).  Adds sinusoidal positions, runs the
+        bidirectional stack."""
+        cfg = self.cfg
+        x = enc_input + sinusoidal_positions(enc_input.shape[1], cfg.d_model).astype(
+            enc_input.dtype
+        )
+
+        def body(carry, layer_p):
+            h = _apply_norm(layer_p["norm1"], cfg, carry)
+            carry = carry + attn.bidir_attention(layer_p["mixer"], cfg, h)
+            h = _apply_norm(layer_p["norm2"], cfg, carry)
+            mlp_out, _, _ = _apply_mlp(layer_p["mlp"], cfg, cfg.mlp_type, h)
+            return carry + mlp_out, None
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, params["enc_stack"])
+        return _apply_norm(params["enc_final_norm"], cfg, x)
+
+    # -- train forward -------------------------------------------------------
+    def logits(self, params, tokens, enc_out=None):
+        cfg = self.cfg
+        b, s = tokens.shape
+        x = embed(params["embed"], tokens)
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        aux_total = jnp.float32(0.0)
+
+        for i in range(cfg.first_dense):
+            x, aux = decoder_layer_train(params["prefix"][i], cfg, self.kinds[i], x, positions)
+            aux_total += aux
+
+        if self.n_periods:
+            def body(carry, layer_p):
+                x, aux_total = carry
+                for j, kind in enumerate(self.period_kinds):
+                    p = layer_p[f"sub{j}"]
+                    mixer, mlp = kind
+                    h = _apply_norm(p["norm1"], cfg, x)
+                    mix_out, _ = _apply_mixer_train(p["mixer"], cfg, mixer, h, positions)
+                    x = x + mix_out
+                    if cfg.is_encdec:
+                        h = _apply_norm(p["norm_cross"], cfg, x)
+                        x = x + attn.cross_attention(p["cross"], cfg, h, enc_out)
+                    h = _apply_norm(p["norm2"], cfg, x)
+                    mlp_out, aux, _ = _apply_mlp(p["mlp"], cfg, mlp, h)
+                    x = x + mlp_out
+                    aux_total += aux
+                x = constrain(x, ("batch", "seq", "embed_act"))
+                return (x, aux_total), None
+
+            if cfg.remat:
+                body = jax.checkpoint(body)
+            (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), params["stack"])
+
+        x = _apply_norm(params["final_norm"], cfg, x)
+        if cfg.tie_embeddings:
+            logits = unembed(params["embed"], x)
+        else:
+            logits = dense(params["unembed"]["w"], x, "bsd,dv->bsv",
+                           waxes=("embed", "vocab"))
+            logits = constrain(logits, ("batch", "seq", "vocab_act"))
+        return logits, aux_total
+
+    def loss(self, params, batch):
+        """Next-token CE (+ MoE aux).  batch: {tokens, [enc_input]}.
+
+        The gold-logit pick uses a vocab-range compare + masked sum instead
+        of take_along_axis: a gather along the TP-sharded vocab axis forces
+        SPMD to all-gather the logits (GiBs at 512 devices); the compare
+        formulation reduces shard-locally and psums a scalar per token.
+        """
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        enc_out = None
+        if cfg.is_encdec:
+            enc_out = self.encode(params, batch["enc_input"])
+        logits, aux = self.logits(params, tokens, enc_out)
+        tgt = tokens[:, 1:]
+        lg = logits[:, :-1].astype(jnp.float32)
+        logz = jax.nn.logsumexp(lg, axis=-1)
+        vocab_ids = jnp.arange(cfg.vocab, dtype=tokens.dtype)
+        onehot = (vocab_ids[None, None, :] == tgt[..., None])
+        gold = jnp.sum(jnp.where(onehot, lg, 0.0), axis=-1)
+        ce = jnp.mean(logz - gold)
+        return ce + aux, {"ce": ce, "aux": aux}
+
+    # -- prefill ----------------------------------------------------------
+    def _layer_prefill(self, p, kind, x, positions, enc_out):
+        """One layer forward that also emits its decode-cache entry."""
+        cfg = self.cfg
+        mixer, mlp = kind
+        h = _apply_norm(p["norm1"], cfg, x)
+        if mixer == "attn":
+            if cfg.attn_type == "mla":
+                mo, entry = attn.mla_train(p["mixer"], cfg, h, positions, return_kv=True)
+            else:
+                mo, entry = attn.attention_train(p["mixer"], cfg, h, positions, return_kv=True)
+        elif mixer == "rwkv":
+            mo, entry = ssm.rwkv_time_mix(p["mixer"], cfg, h)
+        elif mixer == "mamba":
+            mo, entry = ssm.mamba_mixer(p["mixer"], cfg, cfg.mamba, h)
+        else:
+            raise ValueError(mixer)
+        x = x + mo
+        if cfg.is_encdec:
+            hq = _apply_norm(p["norm_cross"], cfg, x)
+            x = x + attn.cross_attention(p["cross"], cfg, hq, enc_out)
+        h = _apply_norm(p["norm2"], cfg, x)
+        cm_in = jnp.zeros((x.shape[0], cfg.d_model), x.dtype) if mixer == "rwkv" else None
+        mo, _, new_cm = _apply_mlp(p["mlp"], cfg, mlp, h, cm_in)
+        if mixer == "rwkv" and new_cm is not None:
+            entry = dict(entry, x_prev_cm=new_cm)
+        x = x + mo
+        x = constrain(x, ("batch", "seq", "embed_act"))
+        return x, entry
+
+    def prefill(self, params, tokens, enc_out=None):
+        """Process a full prompt; return (last-token logits, decode cache).
+
+        The cache sequence capacity equals the prompt length (SWA: the
+        window) — use ``pad_cache`` to extend it before generating.
+        """
+        cfg = self.cfg
+        b, s = tokens.shape
+        x = embed(params["embed"], tokens)
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        cache = {}
+
+        if cfg.first_dense:
+            prefix = []
+            for i in range(cfg.first_dense):
+                x, entry = self._layer_prefill(
+                    params["prefix"][i], self.kinds[i], x, positions, enc_out)
+                prefix.append(entry)
+            cache["prefix"] = prefix
+
+        if self.n_periods:
+            def body(x, layer_p):
+                entries = {}
+                for j, kind in enumerate(self.period_kinds):
+                    x, entry = self._layer_prefill(
+                        layer_p[f"sub{j}"], kind, x, positions, enc_out)
+                    entries[f"sub{j}"] = entry
+                return x, entries
+
+            x, stack_cache = jax.lax.scan(body, x, params["stack"])
+            cache["stack"] = stack_cache
+
+        x = _apply_norm(params["final_norm"], cfg, x[:, -1:])
+        if cfg.tie_embeddings:
+            logits = unembed(params["embed"], x)
+        else:
+            logits = dense(params["unembed"]["w"], x, "bsd,dv->bsv")
+        if cfg.is_encdec:
+            cache = self.prefill_cross(params, cache, enc_out)
+        return logits[:, 0], cache
+
+    def pad_cache(self, cache, extra: int):
+        """Grow attention caches by ``extra`` positions (for generation)."""
+        cfg = self.cfg
+        if cfg.attn_type == "swa" or cfg.mixer == "rwkv":
+            return cache    # ring buffer / recurrent state: fixed size
+
+        def grow(path, a):
+            names = [str(getattr(k, "key", k)) for k in path]
+            if any(n in ("k", "v", "ckv", "krope") for n in names) and "cross" not in names:
+                seq_axis = a.ndim - (2 if names[-1] in ("ckv", "krope") else 3)
+                pad = [(0, 0)] * a.ndim
+                pad[seq_axis] = (0, extra)
+                return jnp.pad(a, pad)
+            return a
+
+        return jax.tree_util.tree_map_with_path(grow, cache)
+
+    # -- decode ----------------------------------------------------------
+    def init_cache(self, batch: int, max_seq: int):
+        cfg = self.cfg
+        out = {}
+        if cfg.first_dense:
+            out["prefix"] = [
+                layer_cache_init(cfg, self.kinds[i], batch, max_seq)
+                for i in range(cfg.first_dense)
+            ]
+        if self.n_periods:
+            def stack(i_kind):
+                j, kind = i_kind
+                one = layer_cache_init(cfg, kind, batch, max_seq)
+                return jax.tree_util.tree_map(
+                    lambda a: jnp.broadcast_to(a, (self.n_periods,) + a.shape), one)
+            out["stack"] = {f"sub{j}": stack((j, k))
+                            for j, k in enumerate(self.period_kinds)}
+        if cfg.is_encdec:
+            # cross K/V cached at encode time; placeholder zeros here
+            H, hd = cfg.n_heads, cfg.d_head
+            ck = jnp.zeros((self.n_periods, batch, cfg.enc_seq, H, hd), cfg.param_dtype)
+            out["cross"] = {"k": ck, "v": ck}
+        return out
+
+    def cache_axes(self):
+        cfg = self.cfg
+        out = {}
+        if cfg.first_dense:
+            out["prefix"] = [
+                layer_cache_axes(cfg, self.kinds[i]) for i in range(cfg.first_dense)
+            ]
+        if self.n_periods:
+            out["stack"] = {
+                f"sub{j}": jax.tree_util.tree_map(
+                    lambda ax: ("stack",) + ax,
+                    layer_cache_axes(cfg, k),
+                    is_leaf=lambda x: isinstance(x, tuple) and all(
+                        isinstance(e, (str, type(None))) for e in x),
+                )
+                for j, k in enumerate(self.period_kinds)
+            }
+        if cfg.is_encdec:
+            ax = ("stack", "batch", None, "heads_act", None)
+            out["cross"] = {"k": ax, "v": ax}
+        return out
+
+    def prefill_cross(self, params, cache, enc_out):
+        """Fill cross-attention K/V from encoder output (whisper serve).
+
+        Computed once per request instead of per decode step — the KV form
+        of "compute early, transmit less" (DESIGN.md §4: the encoder output
+        is the natural cut point of an enc-dec pipeline).
+        """
+
+        def per_layer(_, layer_p):
+            cr = layer_p["sub0"]["cross"]     # enc-dec stacks have period 1
+            k = dense(cr["wk"], enc_out, "btd,dhe->bthe")
+            v = dense(cr["wv"], enc_out, "btd,dhe->bthe")
+            return None, (k, v)
+
+        _, (ks, vs) = jax.lax.scan(per_layer, None, params["stack"])
+        return dict(cache, cross={"k": ks, "v": vs})
+
+    def decode_step(self, params, token, cache, position):
+        """token: (b, 1) int32; position: scalar int32.  -> (logits, cache)."""
+        cfg = self.cfg
+        b = token.shape[0]
+        x = embed(params["embed"], token)
+        new_cache = dict(cache)
+
+        if cfg.first_dense:
+            new_prefix = []
+            for i in range(cfg.first_dense):
+                x, c = decoder_layer_decode(
+                    params["prefix"][i], cfg, self.kinds[i], x, cache["prefix"][i], position)
+                new_prefix.append(c)
+            new_cache["prefix"] = new_prefix
+
+        if self.n_periods:
+            cross = cache.get("cross")
+
+            def body(x, xs):
+                layer_p, layer_c, cross_kv = xs
+                new_c = {}
+                for j, kind in enumerate(self.period_kinds):
+                    p, c = layer_p[f"sub{j}"], layer_c[f"sub{j}"]
+                    h = _apply_norm(p["norm1"], cfg, x)
+                    mixer, mlp = kind
+                    if mixer == "attn":
+                        if cfg.attn_type == "mla":
+                            mo, nc = attn.mla_decode(p["mixer"], cfg, h, c, position)
+                        else:
+                            mo, nc = attn.attention_decode(p["mixer"], cfg, h, c, position)
+                    elif mixer == "rwkv":
+                        mo, nc = ssm.rwkv_time_mix(p["mixer"], cfg, h, c)
+                    elif mixer == "mamba":
+                        mo, nc = ssm.mamba_mixer(p["mixer"], cfg, cfg.mamba, h, c)
+                    x = x + mo
+                    if cfg.is_encdec:
+                        hq = _apply_norm(p["norm_cross"], cfg, x)
+                        q = dense(p["cross"]["wq"], hq, "bsd,dhe->bshe")
+                        ck, cv = cross_kv
+                        lg = jnp.einsum("bshe,bthe->bhst", q, ck,
+                                        preferred_element_type=jnp.float32)
+                        pr = jax.nn.softmax(lg / math.sqrt(cfg.d_head), axis=-1)
+                        co = jnp.einsum("bhst,bthe->bshe", pr.astype(cv.dtype), cv,
+                                        preferred_element_type=jnp.float32).astype(cv.dtype)
+                        x = x + dense(p["cross"]["wo"], co, "bshe,hed->bsd")
+                    h = _apply_norm(p["norm2"], cfg, x)
+                    cm_state = c.get("x_prev_cm") if mixer == "rwkv" else None
+                    mo, _, new_cm = _apply_mlp(p["mlp"], cfg, mlp, h, cm_state)
+                    if mixer == "rwkv" and new_cm is not None:
+                        nc = dict(nc, x_prev_cm=new_cm)
+                    x = x + mo
+                    new_c[f"sub{j}"] = nc
+                return x, new_c
+
+            cross_xs = ((cache["cross"]["k"], cache["cross"]["v"])
+                        if cfg.is_encdec else
+                        (jnp.zeros((self.n_periods,)), jnp.zeros((self.n_periods,))))
+            x, new_stack = jax.lax.scan(body, x, (params["stack"], cache["stack"], cross_xs))
+            new_cache["stack"] = new_stack
+
+        x = _apply_norm(params["final_norm"], cfg, x)
+        if cfg.tie_embeddings:
+            logits = unembed(params["embed"], x)
+        else:
+            logits = dense(params["unembed"]["w"], x, "bsd,dv->bsv")
+        return logits, new_cache

@@ -1,0 +1,189 @@
+"""Logical-axis sharding vocabulary (MaxText-style rules).
+
+Model code annotates tensors with *logical* axis names ("batch", "embed",
+"heads", "experts", ...).  A *rules* table maps logical names to mesh axis
+names; the placement solver (repro.core.placement) picks the rules, the
+launcher activates them, and model code stays oblivious — that separation
+is what lets the comp-comm solver re-place the same model without touching
+model code (DESIGN.md §2).
+
+Rules values may be a mesh axis name, a tuple of axis names (a logical axis
+sharded over several mesh axes), or None (replicated).  Mesh axes absent
+from the active mesh are dropped at resolve time, so one rules table serves
+both the single-pod (data, model) and multi-pod (pod, data, model) meshes.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Mapping, Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# Default rules: FSDP over 'data' (params' embed axis), TP over 'model'
+# (heads / mlp / vocab / experts), batch over ('pod', 'data').
+DEFAULT_RULES: dict = {
+    # activation axes
+    "batch": ("pod", "data"),
+    "seq": None,
+    "kv_seq": None,          # attention K/V sequence dim (kept gatherable)
+    "cache_seq": None,          # KV-cache sequence; 'data' for long-context cells
+    "embed_act": None,          # activation d_model: kept replicated (TP collects)
+    "heads_act": "model",
+    "mlp_act": "model",
+    "experts_act": "model",
+    "vocab_act": "model",
+    # parameter axes
+    "embed": "data",            # FSDP shard dim of weight matrices
+    "embed_nofsdp": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "experts": "model",
+    "vocab": "model",
+    "kv_lora": None,
+    "conv": None,
+    "state": None,
+    "dt_rank": None,
+    "stack": None,              # scanned-layer leading axis: never sharded
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingContext:
+    mesh: Mesh
+    rules: Mapping[str, object]
+
+    def resolve(self, logical_axes: Sequence[Optional[str]]) -> P:
+        """Map logical axes -> PartitionSpec, dropping absent mesh axes and
+        axes whose size does not divide the tensor dimension (checked by the
+        caller via resolve_for_shape when shapes are known)."""
+        mesh_axes = set(self.mesh.axis_names)
+        spec = []
+        used = set()
+        for ax in logical_axes:
+            entry = self.rules.get(ax) if ax is not None else None
+            if entry is None:
+                spec.append(None)
+                continue
+            if isinstance(entry, str):
+                entry = (entry,)
+            picked = tuple(a for a in entry if a in mesh_axes and a not in used)
+            used.update(picked)
+            if not picked:
+                spec.append(None)
+            elif len(picked) == 1:
+                spec.append(picked[0])
+            else:
+                spec.append(picked)
+        return P(*spec)
+
+    def resolve_for_shape(self, logical_axes, shape) -> P:
+        """Like resolve(), but drops mesh axes that don't divide the dim."""
+        mesh_shape = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        base = self.resolve(logical_axes)
+        out = []
+        for dim, entry in zip(shape, tuple(base) + (None,) * (len(shape) - len(base))):
+            if entry is None:
+                out.append(None)
+                continue
+            axes = (entry,) if isinstance(entry, str) else tuple(entry)
+            ways = 1
+            kept = []
+            for a in axes:
+                ways *= mesh_shape[a]
+                kept.append(a)
+            if dim % ways != 0:
+                # drop trailing axes until it divides; replicate if none fit
+                while kept and dim % _prod(mesh_shape[a] for a in kept) != 0:
+                    kept.pop()
+            if not kept:
+                out.append(None)
+            elif len(kept) == 1:
+                out.append(kept[0])
+            else:
+                out.append(tuple(kept))
+        return P(*out)
+
+    def named_sharding(self, logical_axes, shape=None) -> NamedSharding:
+        spec = (
+            self.resolve_for_shape(logical_axes, shape)
+            if shape is not None
+            else self.resolve(logical_axes)
+        )
+        return NamedSharding(self.mesh, spec)
+
+
+def _prod(it):
+    r = 1
+    for x in it:
+        r *= x
+    return r
+
+
+_tls = threading.local()
+
+
+def current_context() -> Optional[ShardingContext]:
+    return getattr(_tls, "ctx", None)
+
+
+@contextlib.contextmanager
+def use_sharding(mesh: Mesh, rules: Mapping[str, object] | None = None):
+    """Activate a sharding context; model-code `constrain()` calls bind to it."""
+    prev = current_context()
+    _tls.ctx = ShardingContext(mesh=mesh, rules=dict(DEFAULT_RULES, **(rules or {})))
+    try:
+        with mesh:
+            yield _tls.ctx
+    finally:
+        _tls.ctx = prev
+
+
+def _manual_axes() -> frozenset:
+    """Mesh axes currently bound Manual (inside a shard_map over them).
+    Constraints must not mention them: the tensor is already axis-local."""
+    try:
+        am = jax.sharding.get_abstract_mesh()
+        if am is None or am.empty:
+            return frozenset()
+        return frozenset(
+            name for name, ty in zip(am.axis_names, am.axis_types)
+            if str(ty).endswith("Manual"))
+    except Exception:  # noqa: BLE001 — abstract mesh API absent/changed
+        return frozenset()
+
+
+def shard_map_mesh(ctx):
+    """Mesh argument for a nested-safe shard_map: None (bind the ambient
+    context mesh) when tracing inside another shard_map region, else the
+    concrete mesh."""
+    try:
+        am = jax.sharding.get_abstract_mesh()
+        if am is not None and not am.empty:
+            return None
+    except Exception:  # noqa: BLE001
+        pass
+    return ctx.mesh
+
+
+def constrain(x: jax.Array, logical_axes: Sequence[Optional[str]]) -> jax.Array:
+    """Annotate an activation with logical axes (no-op outside a context)."""
+    ctx = current_context()
+    if ctx is None:
+        return x
+    spec = ctx.resolve_for_shape(logical_axes, x.shape)
+    manual = _manual_axes()
+    if manual:
+        def drop(entry):
+            if entry is None:
+                return None
+            axes = (entry,) if isinstance(entry, str) else tuple(entry)
+            kept = tuple(a for a in axes if a not in manual)
+            return kept[0] if len(kept) == 1 else (kept or None)
+        spec = P(*[drop(e) for e in spec])
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))

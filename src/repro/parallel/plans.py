@@ -1,0 +1,95 @@
+"""Named sharding plans = logical-axis rule sets (the solver's vocabulary).
+
+A plan is to a TPU job what a cut-point configuration is to a camera
+pipeline (DESIGN.md §2): it decides which bytes cross which interconnect.
+`recommend_plan` is the placement solver's arch-level decision, driven by
+the same napkin math as core.placement.estimate_plan:
+
+* ``fsdp``  — pure data parallelism over all mesh axes with 2D-sharded
+  parameters (ZeRO-3).  Per-step traffic ~= one parameter all-gather
+  (hoisted out of the layer scan by XLA) + one gradient reduce-scatter.
+  Optimal when params_bytes << activation-AR traffic of TP, i.e. for the
+  small/medium dense archs (9-34B at 4k batch-tokens per chip).
+* ``tp``    — Megatron-style tensor parallelism on the 'model' axis with
+  batch DP on 'data'.  Needed when one chip cannot hold its FSDP shard's
+  working set or when per-device batch would vanish; the naive variant
+  all-reduces full activations twice per layer.
+* ``tp_sp`` — TP + sequence-parallel residual stream: activations between
+  blocks are sharded over 'model' along the sequence axis, so each TP
+  all-reduce becomes reduce-scatter(+all-gather) at half the traffic and
+  norms compute on 1/16th of the tokens.
+* ``ep``    — tp_sp plus experts sharded over 'model' (MoE all-to-alls stay
+  intra-pod).  MoE archs pick ep/tp per `MoEConfig.parallelism`.
+
+Decode plans are orthogonal: batch over 'data', heads over 'model',
+long-context cells shard the cache over 'data' (rules_for_cell in
+launch/dryrun.py).
+"""
+
+from __future__ import annotations
+
+PLANS = {
+    # Megatron TP (naive): activations replicated over 'model' between ops.
+    "tp": {},
+
+    # TP + sequence-parallel residual stream.
+    "tp_sp": {
+        "seq": "model",
+    },
+
+    # 1D-FSDP on the 'model' axis + DP on 'data' (MaxText-style hybrid).
+    # Weights shard their embed dim 16-way over 'model' and are all-gathered
+    # at use (scan-hoisted); batch is 16-way DP on 'data'; no tensor is
+    # sharded on two mesh axes.  We *measured* (EXPERIMENTS.md §Perf iter 3)
+    # that 256-way batch x 256-way embed sharding trips XLA's involuntary-
+    # full-rematerialization fallback (46 TB activation gathers, Shardy bug
+    # b/433785288), so ZeRO stays 1D.  Parameters deliberately stay sharded
+    # intra-pod: the pod axis carries only the gradient all-reduce — the
+    # comp-comm cut again.
+    "fsdp": {
+        "manual_fsdp": True,
+        "batch": ("pod", "data"),
+        "seq": "model",
+        "embed": "model",
+        "vocab": "model",
+        "heads": None,
+        "kv_heads": None,
+        "mlp": None,
+        "heads_act": None,
+        "mlp_act": None,
+        "experts_act": None,
+        "vocab_act": None,
+    },
+}
+
+
+PLANS["fsdp_noseq"] = dict(PLANS["fsdp"], seq=None)
+
+
+def recommend_plan(cfg, shape) -> str:
+    """Arch-level plan choice (the placement solver's static decision).
+
+    MoE models keep the 'model' axis for EP/TP expert placement; dense
+    models below ~40B params are FSDP-dominant at these batch sizes.
+
+    Recurrent mixers (mamba/rwkv) must NOT shard the sequence globally:
+    their time scans are sequential, so a seq-sharded residual stream makes
+    XLA re-gather the full sequence every layer (measured on jamba train:
+    4.9 TiB/device of all-gathers — §Perf iteration 6).  The MoE block
+    still seq-shards internally at its own shard_map boundary
+    (models/moe.py), which stays local and cheap.
+    """
+    if shape.mode != "train":
+        return "tp"          # serving: TP heads + DP batch; cache rules per cell
+    recurrent = cfg.mixer in ("rwkv", "mamba")
+    if cfg.moe is not None:
+        return "tp" if recurrent else "tp_sp"
+    if recurrent:
+        return "fsdp_noseq"  # batch-DP + param sharding, full seq per device
+    # dense: params bf16 all-gather once per step vs 2 activation ARs/layer
+    # favors FSDP until params_bytes ~ tokens*d_model*n_layers*4 (napkin)
+    return "fsdp"
+
+
+def plan_rules(name: str) -> dict:
+    return dict(PLANS[name])

@@ -1,0 +1,93 @@
+"""Serving engine: batched prefill + decode with sampling, plus the
+cascade-serving combinator (the paper's filter-before-the-expensive-block
+insight applied to an inference fleet).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cascade import Stage, compacting_cascade
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerConfig:
+    temperature: float = 0.0      # 0 => greedy
+    top_k: int = 0                # 0 => off
+
+
+def sample(logits, key, cfg: SamplerConfig):
+    """logits: (b, vocab) -> (b,) int32."""
+    if cfg.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits.astype(jnp.float32) / cfg.temperature
+    if cfg.top_k:
+        kth = jnp.sort(logits, axis=-1)[:, -cfg.top_k][:, None]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    return jax.random.categorical(key, logits).astype(jnp.int32)
+
+
+def generate(model, params, prompt, n_tokens: int, *, enc_out=None,
+             sampler: SamplerConfig = SamplerConfig(), seed: int = 0):
+    """Prefill the prompt, then scan n_tokens greedy/sampled decode steps.
+
+    prompt: (b, s) int32.  Returns (b, n_tokens) int32.
+    """
+    b, s = prompt.shape
+    last_logits, cache = model.prefill(params, prompt, enc_out)
+    cache = model.pad_cache(cache, n_tokens)
+    key = jax.random.PRNGKey(seed)
+
+    def body(carry, t):
+        cache, logits, key = carry
+        key, sub = jax.random.split(key)
+        tok = sample(logits, sub, sampler)
+        new_logits, cache = model.decode_step(
+            params, tok[:, None], cache, s + t)
+        return (cache, new_logits[:, 0], key), tok
+
+    (_, _, _), toks = jax.lax.scan(
+        body, (cache, last_logits, key), jnp.arange(n_tokens, dtype=jnp.int32))
+    return jnp.moveaxis(toks, 0, 1)
+
+
+# ---------------------------------------------------------------------------
+# Cascade serving (paper §III at cluster scale)
+# ---------------------------------------------------------------------------
+
+
+def cascade_serve(scorer_fn, big_model_fn, requests, *, threshold: float,
+                  capacity_fraction: float = 0.25):
+    """Run a cheap scorer over all requests; only survivors (bounded by a
+    static capacity) reach the big model — 'Viola-Jones in front of the NN'
+    for an inference cluster.
+
+    scorer_fn:   (batch_items) -> scores (b,)   — cheap (small model / heuristic)
+    big_model_fn:(batch_items) -> outputs (b, ...) — expensive
+    Returns (outputs (b, ...) with zeros for filtered, mask, stats).
+    """
+    b = requests.shape[0]
+    cap = max(1, int(b * capacity_fraction))
+    res = compacting_cascade(
+        [Stage(scorer_fn, threshold, "scorer")], requests, capacities=[b])
+    mask = res.mask
+
+    # compact survivors to a static capacity batch for the big model
+    order = jnp.argsort(jnp.where(mask, 0, 1), stable=True)
+    picked = order[:cap]
+    sub_batch = jnp.take(requests, picked, axis=0)
+    sub_out = big_model_fn(sub_batch)
+    out_shape = (b,) + sub_out.shape[1:]
+    outputs = jnp.zeros(out_shape, sub_out.dtype).at[picked].set(sub_out)
+    picked_mask = jnp.zeros((b,), bool).at[picked].set(True)
+    served = picked_mask & mask
+    stats = {
+        "n_candidates": jnp.sum(mask).astype(jnp.int32),
+        "n_served": jnp.sum(served).astype(jnp.int32),
+        "n_dropped_capacity": (jnp.sum(mask) - jnp.sum(served)).astype(jnp.int32),
+    }
+    return jnp.where(served[(...,) + (None,) * (outputs.ndim - 1)], outputs, 0), served, stats

@@ -1,0 +1,124 @@
+"""Fault-tolerant training loop: checkpoint/restart, failure injection,
+straggler accounting, elastic restart.
+
+At 1000+ nodes the loop's contract is: (a) any step may fail (device loss,
+preemption) — recover from the last durable checkpoint with identical data
+order; (b) the mesh after recovery may differ (elastic) — checkpoints are
+mesh-agnostic (ckpt/checkpoint.py); (c) stragglers are visible — per-step
+wall times feed a straggler monitor that flags slow steps (on real fleets:
+triggers hot-spare swap; here: recorded + tested).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.ckpt.checkpoint import (
+    latest_step,
+    prune_old,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.train.optimizer import AdamWConfig, init_opt_state
+from repro.train.step import make_train_step
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int = 100
+    ckpt_every: int = 20
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    keep: int = 2
+    max_retries: int = 3
+    straggler_factor: float = 2.0      # step > factor * median => straggler
+    accum: int = 1
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    times: list = dataclasses.field(default_factory=list)
+    flagged: list = dataclasses.field(default_factory=list)
+
+    def record(self, step: int, dt: float, factor: float):
+        self.times.append(dt)
+        med = float(np.median(self.times[-50:]))
+        if len(self.times) > 5 and dt > factor * med:
+            self.flagged.append((step, dt, med))
+
+    @property
+    def median(self) -> float:
+        return float(np.median(self.times)) if self.times else 0.0
+
+
+def train(model, make_batch, loop_cfg: LoopConfig, opt_cfg: AdamWConfig = None,
+          params=None, seed: int = 0, fail_hook=None, log_every: int = 10,
+          verbose: bool = True):
+    """Run (or resume) training.  Returns (params, opt_state, history).
+
+    ``make_batch(step) -> batch`` must be deterministic (data/pipeline.py).
+    ``fail_hook(step)`` may raise to emulate node failure — the loop
+    restores the last checkpoint and replays; tests assert loss continuity.
+    """
+    opt_cfg = opt_cfg or AdamWConfig()
+    step_fn = jax.jit(make_train_step(model, opt_cfg, accum=loop_cfg.accum),
+                      donate_argnums=(0, 1))
+
+    if params is None:
+        params = model.init(jax.random.PRNGKey(seed))
+    opt_state = init_opt_state(params)
+
+    start = 0
+    last = latest_step(loop_cfg.ckpt_dir)
+    if last is not None:
+        (params, opt_state), extra = restore_checkpoint(
+            loop_cfg.ckpt_dir, last, (params, opt_state))
+        start = extra["next_step"]
+        if verbose:
+            print(f"[loop] resumed from step {last} -> continuing at {start}")
+
+    history = []
+    monitor = StragglerMonitor()
+    step = start
+    retries = 0
+    while step < loop_cfg.total_steps:
+        t0 = time.time()
+        try:
+            if fail_hook is not None:
+                fail_hook(step)
+            batch = make_batch(step)
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            loss = float(metrics["loss"])
+        except Exception as e:  # noqa: BLE001 — the recovery path IS the feature
+            retries += 1
+            if retries > loop_cfg.max_retries:
+                raise
+            last = latest_step(loop_cfg.ckpt_dir)
+            if verbose:
+                print(f"[loop] step {step} failed ({e}); restoring ckpt {last}")
+            if last is None:
+                params = model.init(jax.random.PRNGKey(seed))
+                opt_state = init_opt_state(params)
+                step = 0
+            else:
+                (params, opt_state), extra = restore_checkpoint(
+                    loop_cfg.ckpt_dir, last, (params, opt_state))
+                step = extra["next_step"]
+            continue
+
+        dt = time.time() - t0
+        monitor.record(step, dt, loop_cfg.straggler_factor)
+        history.append({"step": step, "loss": loss, "dt": dt})
+        if verbose and step % log_every == 0:
+            print(f"[loop] step {step:5d} loss {loss:.4f} ({dt*1e3:.0f} ms)")
+
+        step += 1
+        if step % loop_cfg.ckpt_every == 0 or step == loop_cfg.total_steps:
+            save_checkpoint(loop_cfg.ckpt_dir, step, (params, opt_state),
+                            extra={"next_step": step})
+            prune_old(loop_cfg.ckpt_dir, loop_cfg.keep)
+
+    return params, opt_state, {"history": history, "stragglers": monitor.flagged}

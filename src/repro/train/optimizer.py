@@ -1,0 +1,100 @@
+"""AdamW with ZeRO-compatible sharded state (pure JAX; no optax offline).
+
+Optimizer state mirrors the parameter pytree: f32 master copy + first/second
+moments.  Because state leaves inherit the parameters' logical axes, the
+FSDP rules shard them automatically — ZeRO-1/2 falls out of the sharding
+rules rather than being a special code path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr_peak: float = 3e-4
+    lr_min: float = 3e-5
+    warmup_steps: int = 200
+    decay_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+class OptState(NamedTuple):
+    step: jax.Array           # scalar int32
+    master: object            # f32 copy of params (pytree)
+    mu: object                # first moment (pytree, f32)
+    nu: object                # second moment (pytree, f32)
+
+
+def init_opt_state(params) -> OptState:
+    # explicit copy: f32 params would otherwise alias the master buffer and
+    # break double-donation in the jit'd step
+    f32 = lambda p: jnp.array(p, dtype=jnp.float32, copy=True)
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return OptState(
+        step=jnp.zeros((), jnp.int32),
+        master=jax.tree_util.tree_map(f32, params),
+        mu=jax.tree_util.tree_map(zeros, params),
+        nu=jax.tree_util.tree_map(zeros, params),
+    )
+
+
+def lr_schedule(cfg: AdamWConfig, step):
+    """Linear warmup then cosine decay to lr_min."""
+    step = step.astype(jnp.float32)
+    warm = cfg.lr_peak * step / jnp.maximum(cfg.warmup_steps, 1)
+    frac = jnp.clip((step - cfg.warmup_steps) /
+                    jnp.maximum(cfg.decay_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.lr_min + 0.5 * (cfg.lr_peak - cfg.lr_min) * (1 + jnp.cos(jnp.pi * frac))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree_util.tree_map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def adamw_update(cfg: AdamWConfig, grads, state: OptState, param_dtype=jnp.bfloat16):
+    """One AdamW step.  Returns (new_params_cast, new_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state.step + 1
+    lr = lr_schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mh = m / b1c
+        vh = v / b2c
+        # decoupled weight decay on the master copy
+        new_p = p - lr * (mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p)
+        return new_p, m, v
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    flat_p = treedef.flatten_up_to(state.master)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_master = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_mu = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_nu = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+
+    new_params = jax.tree_util.tree_map(lambda p: p.astype(param_dtype), new_master)
+    new_state = OptState(step=step, master=new_master, mu=new_mu, nu=new_nu)
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,201 @@
+"""Core library tests: pipeline, cost model, placement, cascade, reduction.
+
+Includes hypothesis property tests on the system invariants (assignment
+deliverable c)."""
+
+import math
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    Block,
+    BlockKind,
+    EFState,
+    HardwareProfile,
+    Pipeline,
+    Roofline,
+    Stage,
+    cascade_flops,
+    compacting_cascade,
+    dequantize_int8,
+    ef_compress_int8,
+    ef_compress_topk,
+    energy_cost,
+    estimate_plan,
+    linear_pipeline,
+    masked_cascade,
+    quantize_bits,
+    quantize_int8,
+    ShardingPlan,
+    solve_cut,
+    throughput_cost,
+)
+
+
+def toy_pipeline():
+    return linear_pipeline("toy", [
+        dict(name="src", flops=0, bytes_in=0, bytes_out=1000, kind="source"),
+        dict(name="filt", flops=5e3, bytes_in=1000, bytes_out=1000,
+             kind="optional", selectivity=0.2),
+        dict(name="big", flops=1e6, bytes_in=1000, bytes_out=10),
+    ])
+
+
+def toy_profiles():
+    return {
+        "src": HardwareProfile("s", p_active_w=10e-6, p_leak_w=10e-6),
+        "filt": HardwareProfile("f", flops_per_s=1e6, p_active_w=20e-6, p_leak_w=5e-6),
+        "big": HardwareProfile("b", flops_per_s=1e6, p_active_w=100e-6, p_leak_w=20e-6),
+    }
+
+
+class TestPipeline:
+    def test_selectivity_scales_downstream(self):
+        p = toy_pipeline()
+        eff = p.effective_blocks()
+        assert eff[2].flops == pytest.approx(1e6 * 0.2)
+
+    def test_configure_drops_optional_only(self):
+        p = toy_pipeline()
+        q = p.configure(())
+        assert [b.name for b in q] == ["src", "big"]
+        with pytest.raises(KeyError):
+            p.configure(("big",))
+
+    def test_cut_payload(self):
+        p = toy_pipeline()
+        assert p.cut_payload_bytes(p.index("filt")) == pytest.approx(1000 * 0.2)
+
+
+class TestCostModel:
+    def test_energy_monotone_in_comm_price(self):
+        p = toy_pipeline()
+        profs = toy_profiles()
+        cheap = energy_cost(p, profs, HardwareProfile("l", joules_per_byte=1e-9), "filt")
+        dear = energy_cost(p, profs, HardwareProfile("l", joules_per_byte=1e-6), "filt")
+        assert dear.total_w > cheap.total_w
+        assert dear.compute_w == pytest.approx(cheap.compute_w)
+
+    def test_throughput_bottleneck(self):
+        p = toy_pipeline()
+        profs = toy_profiles()
+        rep = throughput_cost(p, profs, HardwareProfile("l", link_bw=1e6), "big")
+        # big: 1e6 flops * 0.2 sel / 1e6 flops/s = 0.2 s -> 5 fps
+        assert rep.compute_fps == pytest.approx(5.0, rel=0.05)
+
+    def test_roofline_terms_and_dominance(self):
+        r = Roofline("x", flops=197e12 * 256, hbm_bytes=0, collective_bytes=0,
+                     n_chips=256, model_flops=197e12 * 256)
+        assert r.compute_s == pytest.approx(1.0)
+        assert r.dominant == "compute"
+        assert r.roofline_fraction == pytest.approx(1.0)
+
+
+class TestSolver:
+    def test_solver_matches_bruteforce(self):
+        p = toy_pipeline()
+        profs = toy_profiles()
+        link = HardwareProfile("l", joules_per_byte=1e-7)
+        sol = solve_cut(p, profs, link, regime="energy")
+        best = min(sol.all_reports, key=lambda r: r.total_w)
+        assert sol.report.total_w == pytest.approx(best.total_w)
+
+    @given(st.floats(min_value=1e-10, max_value=1e-4))
+    @settings(max_examples=25, deadline=None)
+    def test_solver_never_beaten(self, jpb):
+        """Property: the solver's choice is optimal for any link price."""
+        p = toy_pipeline()
+        profs = toy_profiles()
+        link = HardwareProfile("l", joules_per_byte=jpb)
+        sol = solve_cut(p, profs, link, regime="energy")
+        for rep in sol.all_reports:
+            assert sol.report.total_w <= rep.total_w + 1e-15
+
+    def test_plan_estimator_prefers_fsdp_for_small_dense(self):
+        kw = dict(name="yi", params=8.8e9, active_params=8.8e9,
+                  layer_flops=2 * 8.8e9 * 1_048_576, train=True,
+                  tokens=1_048_576, d_model=4096, seq=4096, batch=256,
+                  n_layers=48)
+        tp = estimate_plan(ShardingPlan("tp", data=16, tensor=16), **kw)
+        fsdp = estimate_plan(ShardingPlan("fsdp", data=16, fsdp=16), **kw)
+        assert fsdp.roofline.collective_s < tp.roofline.collective_s
+
+
+class TestCascade:
+    def _stages(self):
+        return [Stage(lambda x: x[:, 0], 0.4, "a"),
+                Stage(lambda x: x[:, 1], 0.6, "b")]
+
+    def test_masked_semantics(self):
+        items = jax.random.uniform(jax.random.PRNGKey(0), (128, 2))
+        r = masked_cascade(self._stages(), items)
+        expect = np.asarray((items[:, 0] >= 0.4) & (items[:, 1] >= 0.6))
+        assert np.array_equal(np.asarray(r.mask), expect)
+
+    def test_compacting_matches_masked_with_capacity(self):
+        items = jax.random.uniform(jax.random.PRNGKey(1), (128, 2))
+        m = masked_cascade(self._stages(), items)
+        c = compacting_cascade(self._stages(), items, capacities=[128, 128])
+        assert np.array_equal(np.asarray(m.mask), np.asarray(c.mask))
+        assert int(c.dropped.sum()) == 0
+
+    def test_capacity_drops_are_counted(self):
+        items = jax.random.uniform(jax.random.PRNGKey(2), (256, 2))
+        m = masked_cascade(self._stages(), items)
+        cap = max(1, int(m.n_survivors[0]) - 5)
+        c = compacting_cascade(self._stages(), items, capacities=[256, cap])
+        assert int(c.dropped[1]) >= 0
+        assert int(c.mask.sum()) <= int(m.mask.sum())
+
+    @given(st.lists(st.floats(0.05, 1.0), min_size=1, max_size=5),
+           st.lists(st.floats(1.0, 100.0), min_size=1, max_size=5))
+    @settings(max_examples=30, deadline=None)
+    def test_cascade_flops_monotone(self, sels, flops):
+        n = min(len(sels), len(flops))
+        sels, flops = sels[:n], flops[:n]
+        base = cascade_flops(flops, sels)
+        cheaper = cascade_flops(flops, [s * 0.5 for s in sels])
+        assert cheaper <= base + 1e-9
+
+
+class TestReduction:
+    @given(st.integers(0, 2**31 - 1))
+    @settings(max_examples=20, deadline=None)
+    def test_int8_bounded_error(self, seed):
+        x = jax.random.normal(jax.random.PRNGKey(seed), (512,))
+        q, s = quantize_int8(x, block=128)
+        deq = dequantize_int8(q, s, x.shape)
+        # per-block error bounded by scale/2 (round-to-nearest)
+        err = jnp.abs(deq - x)
+        bound = jnp.repeat(s.reshape(-1), 128)[:512] * 0.51
+        assert bool(jnp.all(err <= bound))
+
+    def test_bit_knee_ordering(self):
+        x = jax.random.normal(jax.random.PRNGKey(3), (4096,))
+        errs = {b: float(jnp.linalg.norm(quantize_bits(x, b) - x)) for b in (16, 8, 4)}
+        assert errs[16] < errs[8] < errs[4]
+
+    def test_error_feedback_bounded(self):
+        """EF residual stays bounded over many rounds (no drift)."""
+        x = jax.random.normal(jax.random.PRNGKey(4), (1024,))
+        st_ = EFState.init(x)
+        norms = []
+        for i in range(20):
+            xi = x * (1 + 0.01 * i)
+            _, _, st_ = ef_compress_int8(xi, st_)
+            norms.append(float(jnp.linalg.norm(st_.residual)))
+        assert max(norms) < 0.1 * float(jnp.linalg.norm(x))
+
+    def test_topk_ef_converges_on_constant_input(self):
+        """With EF, repeated top-k transmission sums to the true value."""
+        x = jax.random.normal(jax.random.PRNGKey(5), (256,))
+        st_ = EFState.init(x)
+        acc = jnp.zeros_like(x)
+        for _ in range(40):
+            _, dense, st_ = ef_compress_topk(x, st_, k_fraction=0.1)
+            acc += dense
+        assert float(jnp.linalg.norm(acc / 40 - x)) < 0.2 * float(jnp.linalg.norm(x))

@@ -1,0 +1,183 @@
+"""Per-kernel allclose vs ref.py oracles, sweeping shapes/dtypes
+(assignment deliverable c).  All kernels run interpret=True on CPU; TPU is
+the lowering target."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.integral_image.ops import integral_image as integral_kernel
+from repro.kernels.integral_image.ref import integral_ref
+from repro.kernels.bilateral_blur.kernel import bilateral_blur_pallas
+from repro.kernels.bilateral_blur.ref import blur_ref
+from repro.kernels.quant_matmul.ops import (
+    quant_matmul, quant_matmul_static, symmetric_quantize)
+from repro.kernels.quant_matmul.ref import quant_matmul_ref
+from repro.kernels.rwkv_scan.ops import rwkv_wkv
+from repro.kernels.rwkv_scan.ref import wkv_ref
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("BH,s,d,dtype", [
+        (4, 256, 64, jnp.float32),
+        (2, 512, 128, jnp.float32),
+        (2, 384, 64, jnp.bfloat16),
+        (1, 128, 256, jnp.float32),
+    ])
+    def test_causal_allclose(self, BH, s, d, dtype):
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = jax.random.normal(ks[0], (BH, s, d), dtype)
+        k = jax.random.normal(ks[1], (BH, s, d), dtype)
+        v = jax.random.normal(ks[2], (BH, s, d), dtype)
+        out = flash_attention_bhsd(q, k, v, causal=True, block_q=128,
+                                   block_k=128, interpret=True)
+        ref = attention_ref(q, k, v, causal=True)
+        tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+    @pytest.mark.parametrize("window", [64, 128, 256])
+    def test_sliding_window(self, window):
+        ks = jax.random.split(jax.random.PRNGKey(1), 3)
+        q, k, v = (jax.random.normal(kk, (2, 512, 64)) for kk in ks)
+        out = flash_attention_bhsd(q, k, v, causal=True, window=window,
+                                   block_q=128, block_k=128, interpret=True)
+        ref = attention_ref(q, k, v, causal=True, window=window)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+    def test_gqa_wrapper_matches_expanded(self):
+        ks = jax.random.split(jax.random.PRNGKey(2), 3)
+        b, s, H, KV, d = 2, 256, 8, 2, 64
+        q = jax.random.normal(ks[0], (b, s, H, d))
+        k = jax.random.normal(ks[1], (b, s, KV, d))
+        v = jax.random.normal(ks[2], (b, s, KV, d))
+        out = flash_attention(q, k, v, causal=True, interpret=True)
+        kf = jnp.repeat(k, H // KV, axis=2)
+        vf = jnp.repeat(v, H // KV, axis=2)
+        ref = attention_ref(
+            jnp.moveaxis(q, 2, 1).reshape(b * H, s, d),
+            jnp.moveaxis(kf, 2, 1).reshape(b * H, s, d),
+            jnp.moveaxis(vf, 2, 1).reshape(b * H, s, d), causal=True)
+        ref = jnp.moveaxis(ref.reshape(b, H, s, d), 1, 2)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+    def test_matches_model_streaming_reference(self):
+        """The kernel and the model's jnp streaming path agree — the dry-run
+        lowers the latter; the TPU run would use the former."""
+        from repro.models.attention import _mha_streaming
+        ks = jax.random.split(jax.random.PRNGKey(3), 3)
+        b, s, H, d = 2, 256, 4, 64
+        q = jax.random.normal(ks[0], (b, s, H, d))
+        k = jax.random.normal(ks[1], (b, s, H, d))
+        v = jax.random.normal(ks[2], (b, s, H, d))
+        pos = jnp.arange(s, dtype=jnp.int32)
+        a = _mha_streaming(q, k, v, pos, pos, 1.0 / np.sqrt(d))
+        bq = flash_attention(q, k, v, causal=True, interpret=True)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(bq), atol=2e-5)
+
+
+class TestIntegralImage:
+    @pytest.mark.parametrize("shape", [(1, 32, 64), (3, 144, 176), (2, 60, 300)])
+    def test_allclose(self, shape):
+        img = jax.random.uniform(jax.random.PRNGKey(0), shape)
+        out = integral_kernel(img, interpret=True)
+        ref = integral_ref(img)
+        np.testing.assert_allclose(np.asarray(out[..., 1:, 1:]), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-3)
+
+    def test_streaming_equals_camera_oracle(self):
+        from repro.camera.integral import integral_image as cam
+        img = jax.random.uniform(jax.random.PRNGKey(1), (2, 48, 80))
+        np.testing.assert_allclose(
+            np.asarray(integral_kernel(img, interpret=True)),
+            np.asarray(cam(img)), rtol=2e-5, atol=2e-3)
+
+    @given(st.integers(8, 64), st.integers(8, 64))
+    @settings(max_examples=10, deadline=None)
+    def test_property_last_cell_is_total(self, h, w):
+        img = jnp.ones((1, h, w))
+        ii = integral_kernel(img, interpret=True)
+        assert float(ii[0, -1, -1]) == pytest.approx(h * w, rel=1e-6)
+
+
+class TestBilateralBlur:
+    @pytest.mark.parametrize("shape,bgy", [((32, 24, 17), 16), ((16, 16, 9), 16),
+                                           ((64, 30, 17), 32)])
+    def test_allclose(self, shape, bgy):
+        val = jax.random.normal(jax.random.PRNGKey(0), shape)
+        wt = jax.random.uniform(jax.random.PRNGKey(1), shape)
+        va, wa = bilateral_blur_pallas(val, wt, block_gy=bgy, interpret=True)
+        vb, wb = blur_ref(val, wt)
+        np.testing.assert_allclose(np.asarray(va), np.asarray(vb), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(wa), np.asarray(wb), atol=1e-5)
+
+    def test_mass_preserved_interior(self):
+        """[1,2,1]/4 preserves the sum for constant fields (DC gain 1)."""
+        val = jnp.ones((16, 8, 9))
+        wt = jnp.ones((16, 8, 9))
+        va, _ = bilateral_blur_pallas(val, wt, block_gy=16, interpret=True)
+        np.testing.assert_allclose(np.asarray(va), 1.0, atol=1e-6)
+
+
+class TestQuantMatmul:
+    @pytest.mark.parametrize("m,k,n", [(64, 400, 8), (128, 128, 128),
+                                       (8, 256, 16), (200, 300, 40)])
+    def test_allclose(self, m, k, n):
+        from repro.camera.face_nn import make_sigmoid_lut
+        lut, _ = make_sigmoid_lut()
+        x = jax.random.normal(jax.random.PRNGKey(0), (m, k)) * 0.5
+        w = jax.random.normal(jax.random.PRNGKey(1), (k, n)) * 0.2
+        y = quant_matmul(x, w, lut, apply_lut=True, interpret=True)
+        xq, sx = symmetric_quantize(x)
+        wq, sw = symmetric_quantize(w)
+        ref = quant_matmul_ref(xq, wq, lut, scale_x=float(sx), scale_w=float(sw))
+        np.testing.assert_allclose(np.asarray(y), np.asarray(ref), atol=1e-5)
+
+    def test_static_asic_path(self):
+        from repro.camera.face_nn import make_sigmoid_lut
+        lut, _ = make_sigmoid_lut()
+        x = jax.random.normal(jax.random.PRNGKey(2), (32, 400)) * 0.4
+        w = jax.random.normal(jax.random.PRNGKey(3), (400, 8)) * 0.3
+        xq, sx = symmetric_quantize(x)
+        wq, sw = symmetric_quantize(w)
+        y = quant_matmul_static(xq, wq, lut, scale_x=float(sx),
+                                scale_w=float(sw), interpret=True)
+        ref = quant_matmul_ref(xq, wq, lut, scale_x=float(sx), scale_w=float(sw))
+        np.testing.assert_allclose(np.asarray(y), np.asarray(ref), atol=1e-5)
+
+
+class TestRwkvScan:
+    @pytest.mark.parametrize("T,chunk,dscale", [(64, 16, 2.0), (100, 32, 2.0),
+                                                (96, 16, 6.0), (128, 32, 10.0)])
+    def test_allclose(self, T, chunk, dscale):
+        ks = jax.random.split(jax.random.PRNGKey(0), 5)
+        BH, K = 4, 64
+        r = jax.random.normal(ks[0], (BH, T, K)) * 0.5
+        k = jax.random.normal(ks[1], (BH, T, K)) * 0.5
+        v = jax.random.normal(ks[2], (BH, T, K)) * 0.5
+        w = jax.nn.sigmoid(jax.random.normal(ks[3], (BH, T, K)) * dscale)
+        u = jax.random.normal(ks[4], (BH, K)) * 0.3
+        out = rwkv_wkv(r, k, v, w, u, chunk=chunk, interpret=True)
+        ref = wkv_ref(r, k, v, w, u)
+        rel = float(jnp.max(jnp.abs(out - ref)) / (jnp.max(jnp.abs(ref)) + 1e-9))
+        assert rel < 2e-4, rel
+
+    def test_matches_model_layer_semantics(self):
+        """Kernel == the model's lax.scan wkv (models/ssm)."""
+        from repro.models.ssm import _wkv_step
+        ks = jax.random.split(jax.random.PRNGKey(1), 5)
+        BH, T, K = 2, 48, 64
+        r = jax.random.normal(ks[0], (BH, T, K)) * 0.5
+        k = jax.random.normal(ks[1], (BH, T, K)) * 0.5
+        v = jax.random.normal(ks[2], (BH, T, K)) * 0.5
+        w = jax.nn.sigmoid(jax.random.normal(ks[3], (BH, T, K)) * 3)
+        u = jax.random.normal(ks[4], (BH, K)) * 0.3
+        out = rwkv_wkv(r, k, v, w, u, chunk=16, interpret=True)
+        ref = wkv_ref(r, k, v, w, u)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-4)
