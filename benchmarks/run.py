@@ -2,10 +2,17 @@
 assignment's roofline report.  Prints ``table,name,value,note`` CSV rows
 and wall time per section.
 
-    PYTHONPATH=src python -m benchmarks.run [--only fa,vr,vj,nn,bssa,roofline]
+    PYTHONPATH=src python -m benchmarks.run \
+        [--only fa,vr,vj,nn,bssa,roofline,detect] [--json OUT_DIR]
+
+``--json OUT_DIR`` additionally writes each section's rows plus wall time
+to ``OUT_DIR/BENCH_<section>.json`` — the machine-readable perf
+trajectory (BENCH_detect.json carries the fused-front-end speedup).
 """
 
 import argparse
+import json
+import os
 import time
 
 
@@ -49,6 +56,12 @@ def _bssa():
     return bssa_quality.rows()
 
 
+@section("detect")
+def _detect():
+    from benchmarks import detect_hotpath
+    return detect_hotpath.rows()
+
+
 @section("roofline")
 def _roofline():
     from benchmarks import roofline
@@ -59,6 +72,8 @@ def _roofline():
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="all")
+    ap.add_argument("--json", default=None, metavar="OUT",
+                    help="directory to write BENCH_<section>.json files")
     args = ap.parse_args()
     names = list(SECTIONS) if args.only == "all" else args.only.split(",")
     for name in names:
@@ -71,7 +86,16 @@ def main():
         except Exception as e:  # noqa: BLE001 — report and continue
             print(f"{name},ERROR,{type(e).__name__},{e}")
             raise
-        print(f"# {name}: {time.time()-t0:.1f}s")
+        wall = time.time() - t0
+        print(f"# {name}: {wall:.1f}s")
+        if args.json:
+            os.makedirs(args.json, exist_ok=True)
+            path = os.path.join(args.json, f"BENCH_{name}.json")
+            with open(path, "w") as fh:
+                json.dump({"section": name, "wall_s": wall,
+                           "rows": [[str(c) for c in row] for row in rows]},
+                          fh, indent=1)
+            print(f"# wrote {path}")
 
 
 if __name__ == "__main__":

@@ -13,18 +13,27 @@ import jax.numpy as jnp
 
 from repro.camera.synthetic import face_dataset, security_video
 from repro.camera.viola_jones import (
-    detect_faces,
+    detect_faces_batch,
     make_feature_pool,
     train_cascade,
 )
 
 
 def _eval(casc, frames, truth, scale, step, adaptive):
+    """Sweep point via the fused front-end (identical detections to the
+    reference path; tests/test_detect.py pins the equivalence)."""
+    dets_all, stats = detect_faces_batch(casc, frames, scale, step, adaptive)
+    if stats["dropped"]:
+        # capacity overflow would silently delete detections and corrupt
+        # the accuracy rows this sweep exists to produce: redo this sweep
+        # point with the masked oracle (full capacities), one frame at a
+        # time to bound the gather working set at fine scan settings.
+        dets_all = [detect_faces_batch(casc, f, scale, step, adaptive,
+                                       capacities=None)[0][0]
+                    for f in frames]
+    invocations = stats["n_invocations"]
     tp = fp = fn = 0
-    invocations = 0
-    for i, info in enumerate(truth):
-        dets, n_inv, _ = detect_faces(casc, frames[i], scale, step, adaptive)
-        invocations += n_inv
+    for info, dets in zip(truth, dets_all):
         matched = set()
         for (fy, fx, _s) in info["faces"]:
             hit = any(abs(dy - fy) < 12 and abs(dx - fx) < 12

@@ -20,7 +20,7 @@ from repro.camera.pipelines import (
     FAWorkloadStats, calibrate_fa, fa_pipeline, fa_profiles)
 from repro.camera.synthetic import face_dataset, security_video
 from repro.camera.viola_jones import (
-    detect_faces, extract_windows, make_feature_pool, train_cascade)
+    FusedDetector, extract_windows, make_feature_pool, train_cascade)
 from repro.core.costmodel import energy_cost, IMAGE_SENSOR, MOTION_ASIC, VJ_ASIC
 from repro.core.placement import solve_cut
 
@@ -39,21 +39,32 @@ def main():
     casc = train_cascade(X[:ntr], y[:ntr], pool, n_stages=10, per_stage=33)
     print(f"[vj] cascade: {casc.n_stages} stages x {casc.stage_sizes[0]} features")
 
-    # 2. run the funnel over the synthetic security video
+    # 2. run the funnel over the synthetic security video — VJ through the
+    # frame-resident fused front-end (one integral image per frame, gathered
+    # Haar features, compacting cascade with capacities calibrated on the
+    # first motion frames)
     frames, truth = security_video()
     mask, _ = motion_mask(jnp.asarray(frames), threshold=0.004)
     mask = np.asarray(mask)
+    midx = np.where(mask)[0]
     windows_fired = 0
     auth_hits = 0
-    for i in np.where(mask)[0]:
-        dets, _, _ = detect_faces(casc, frames[i], 1.25, 0.025, True)
-        if not dets:
-            continue
-        wins = extract_windows(frames[i], dets)
-        scores = forward_quantized(
-            nn, jnp.asarray(wins.reshape(len(wins), -1)), 8, lut, lmeta)
-        windows_fired += len(dets)
-        auth_hits += int((np.asarray(scores) > 0.5).sum())
+    if len(midx):
+        det = FusedDetector(casc, frames.shape[1], frames.shape[2])
+        caps = det.calibrate(frames[midx[:4]])
+        print(f"[vj] compacting capacities (calibrated): {caps}")
+        all_dets, dstats = det.detect(frames[midx])
+        if dstats["dropped"]:
+            print(f"[vj] WARNING: {dstats['dropped']} windows dropped at "
+                  "capacity — funnel counts are a lower bound")
+        for i, dets in zip(midx, all_dets):
+            if not dets:
+                continue
+            wins = extract_windows(frames[i], dets)
+            scores = forward_quantized(
+                nn, jnp.asarray(wins.reshape(len(wins), -1)), 8, lut, lmeta)
+            windows_fired += len(dets)
+            auth_hits += int((np.asarray(scores) > 0.5).sum())
     print(f"[funnel] {len(frames)} frames -> {int(mask.sum())} motion "
           f"-> {windows_fired} windows -> {auth_hits} authentications")
 

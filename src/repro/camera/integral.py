@@ -32,6 +32,21 @@ def window_sum(ii: jax.Array, y0, x0, h, w) -> jax.Array:
             - ii[..., y0 + h, x0] + ii[..., y0, x0])
 
 
+def frame_integral(img: jax.Array, *, use_pallas: bool = False,
+                   interpret: bool = False) -> jax.Array:
+    """Frame-level integral, (..., h, w) -> (..., h+1, w+1).
+
+    With ``use_pallas`` the blocked streaming Pallas kernel
+    (kernels/integral_image) produces the table — the detector's frame is
+    then touched exactly once, on-chip; otherwise the jnp cumsum oracle.
+    Both return identical values (pinned in tests/test_kernels.py).
+    """
+    if use_pallas:
+        from repro.kernels.integral_image.ops import integral_image as _k
+        return _k(img, interpret=interpret)
+    return integral_image(img)
+
+
 def streaming_integral_rows(img: jax.Array) -> jax.Array:
     """Row-at-a-time formulation mirroring the paper's hardware unit:
     carry = last completed integral row; each new pixel row is prefix-summed

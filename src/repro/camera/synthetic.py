@@ -123,6 +123,9 @@ def security_video(n_frames: int = 62, h: int = 144, w: int = 176,
 
     Returns (frames (n, h, w) f32, truth dicts per frame)."""
     rng = _rng(seed)
+    # frame 0 is always the static reference, so at most n_frames - 1 frames
+    # can carry motion; clamp instead of letting rng.choice raise.
+    motion_frames = max(0, min(motion_frames, n_frames - 1))
     yb, xb = np.mgrid[0:h, 0:w]
     background = (
         0.45

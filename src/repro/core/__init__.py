@@ -29,7 +29,15 @@ from repro.core.placement import (
     rank_sharding,
     estimate_plan,
 )
-from repro.core.cascade import Stage, CascadeResult, masked_cascade, compacting_cascade, cascade_flops
+from repro.core.cascade import (
+    Stage,
+    CascadeResult,
+    masked_cascade,
+    compacting_cascade,
+    cascade_flops,
+    capacities_from_counts,
+    compaction_work,
+)
 from repro.core.reduction import (
     EFState,
     quantize_int8,

@@ -35,6 +35,7 @@ an inference cluster.
 from __future__ import annotations
 
 import dataclasses
+import math
 from functools import partial
 from typing import Callable, Sequence
 
@@ -158,6 +159,41 @@ def compacting_cascade(
         n_survivors=jnp.stack(counts),
         dropped=jnp.stack(drops),
     )
+
+
+def capacities_from_counts(batch: int, survivor_counts: Sequence[int],
+                           margin: float = 1.5, quantum: int = 128) -> list:
+    """Derive compacting capacities from *measured* per-stage survivor counts.
+
+    ``survivor_counts[i]`` is the (max over calibration items) number of
+    survivors after stage ``i``; stage ``i + 1``'s capacity bounds exactly
+    that population.  ``margin`` multiplies the measurement and ``quantum``
+    rounds up (lane-width friendly), so natural workload variation does not
+    overflow into drops — the same measure-then-set-the-knob procedure the
+    paper uses for window scale/step.  Stage 0 always gets the full batch.
+    """
+    caps = [int(batch)]
+    for c in list(survivor_counts)[:-1]:
+        cap = (int(math.ceil(float(c) * margin)) // quantum + 1) * quantum
+        caps.append(int(min(batch, max(quantum, cap))))
+    return caps
+
+
+def compaction_work(stage_costs: Sequence[float], batch: int,
+                    capacities: Sequence[int] | None = None) -> tuple:
+    """(masked_total, compacted_total) unit-work for one cascade pass.
+
+    The masked oracle evaluates every stage on the full batch; compaction
+    clips stage ``i`` to ``capacities[i]``.  The ratio is the *actual* FLOP
+    saving static-shape compaction realizes (vs the data-dependent ideal
+    that ``cascade_flops`` counts).
+    """
+    masked = float(batch) * float(sum(stage_costs))
+    if capacities is None:
+        return masked, masked
+    compacted = float(sum(float(c) * float(f)
+                          for c, f in zip(capacities, stage_costs)))
+    return masked, compacted
 
 
 def cascade_flops(

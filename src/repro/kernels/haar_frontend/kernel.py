@@ -1,0 +1,87 @@
+"""Fused Haar front-end for TPU (DESIGN.md §3).
+
+One cascade stage over a block of scanning windows, fused in VMEM:
+
+  gather   — each weak classifier is <= 8 corner taps into the flattened
+             frame integral image (which fits VMEM whole: a 176x145 f32
+             table is ~100 kB, far under the ~16 MB budget), indexed as
+             window-base + per-scale static offset;
+  vote     — decision stumps on the variance-normalized responses;
+  reduce   — AdaBoost-weighted sum into one stage score per window.
+
+The grid runs over window row-blocks; the integral image, corner tables
+and stump parameters are broadcast to every step.  The frame is touched
+once (by the integral-image kernel); everything downstream is lookups —
+the paper's early-data-reduction principle applied to the VJ front-end
+itself.  kernels/integral_image produces the table; this kernel consumes
+it without ever re-materializing windows.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _stage_kernel(ii_ref, base_ref, sid_ref, inv_ref, off_ref, wgt_ref,
+                  par_ref, out_ref):
+    ii = ii_ref[0]                                    # (Lp,)
+    base = base_ref[0]                                # (block_n,)
+    sid = sid_ref[0]
+    inv = inv_ref[0]
+    off = jnp.take(off_ref[...], sid, axis=0)         # (block_n, sz*K)
+    idx = base[:, None] + off
+    vals = jnp.take(ii, idx.reshape(-1), axis=0).reshape(idx.shape)
+    bn = vals.shape[0]
+    sz = par_ref.shape[1]
+    resp = jnp.sum((vals * wgt_ref[0][None, :]).reshape(bn, sz, -1), axis=-1)
+    resp = resp * inv[:, None]
+    pred = par_ref[1][None] * jnp.sign(resp - par_ref[0][None])
+    pred = jnp.where(pred == 0.0, 1.0, pred)
+    out_ref[0] = jnp.sum(pred * par_ref[2][None], axis=-1)
+
+
+def haar_stage_scores_pallas(ii_flat, base, sid, inv_norm, offsets, weights,
+                             thresholds, polarity, alphas, *,
+                             block_n: int = 256, interpret: bool = False):
+    """Stage scores (n,) f32; argument contract matches ref.py.
+
+    offsets: (n_scales, sz, K) int32; weights: (sz, K) f32 (0-padded slots).
+    """
+    n = base.shape[0]
+    n_scales, sz, K = offsets.shape
+    L = ii_flat.shape[0]
+    lp = _round_up(L, 128)
+    block_n = min(block_n, _round_up(n, 8))
+    npad = _round_up(n, block_n)
+
+    ii2d = jnp.pad(ii_flat.astype(jnp.float32), (0, lp - L)).reshape(1, lp)
+    base2d = jnp.pad(base.astype(jnp.int32), (0, npad - n)).reshape(1, npad)
+    sid2d = jnp.pad(sid.astype(jnp.int32), (0, npad - n)).reshape(1, npad)
+    inv2d = jnp.pad(inv_norm.astype(jnp.float32), (0, npad - n)).reshape(1, npad)
+    off2d = offsets.reshape(n_scales, sz * K).astype(jnp.int32)
+    wgt2d = weights.reshape(1, sz * K).astype(jnp.float32)
+    par = jnp.stack([thresholds, polarity, alphas]).astype(jnp.float32)
+
+    out = pl.pallas_call(
+        _stage_kernel,
+        grid=(npad // block_n,),
+        in_specs=[
+            pl.BlockSpec((1, lp), lambda i: (0, 0)),
+            pl.BlockSpec((1, block_n), lambda i: (0, i)),
+            pl.BlockSpec((1, block_n), lambda i: (0, i)),
+            pl.BlockSpec((1, block_n), lambda i: (0, i)),
+            pl.BlockSpec((n_scales, sz * K), lambda i: (0, 0)),
+            pl.BlockSpec((1, sz * K), lambda i: (0, 0)),
+            pl.BlockSpec((3, sz), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, npad), jnp.float32),
+        interpret=interpret,
+    )(ii2d, base2d, sid2d, inv2d, off2d, wgt2d, par)
+    return out[0, :n]

@@ -1,0 +1,32 @@
+"""Backend dispatch for the fused Haar front-end.
+
+The jnp reference (ref.py) *is* the production path on CPU — XLA fuses the
+gather/vote/reduce chain well there, and Pallas interpret mode would add
+per-grid-step Python overhead to the hot loop.  On TPU the Pallas kernel
+(kernel.py) keeps the integral image and corner tables VMEM-resident
+across window blocks.  Both compute the same math; tests/test_kernels.py
+pins them together in interpret mode.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.haar_frontend.kernel import haar_stage_scores_pallas
+from repro.kernels.haar_frontend.ref import haar_stage_scores_ref
+
+
+def haar_stage_scores(ii_flat, base, sid, inv_norm, offsets, weights,
+                      thresholds, polarity, alphas, *,
+                      use_pallas: bool | None = None,
+                      block_n: int = 256, interpret: bool = False):
+    """One cascade stage's AdaBoost scores, (n,) f32.  See ref.py for the
+    argument contract."""
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas:
+        return haar_stage_scores_pallas(
+            ii_flat, base, sid, inv_norm, offsets, weights,
+            thresholds, polarity, alphas, block_n=block_n, interpret=interpret)
+    return haar_stage_scores_ref(ii_flat, base, sid, inv_norm, offsets,
+                                 weights, thresholds, polarity, alphas)

@@ -1,0 +1,43 @@
+"""Oracle for the fused Haar front-end: gather + stump vote + stage reduce.
+
+One cascade *stage* over a batch of scanning windows, expressed entirely as
+corner-tap gathers into the flattened frame-level integral image:
+
+  * each weak classifier is <= 8 corner lookups with static +-1/+-2/+-3
+    weights (the 2-/3-rect Haar decomposition after merging shared edges);
+  * corner offsets are precomputed per pyramid *scale* relative to the
+    window's top-left flat index, so a window is fully described by a single
+    base offset plus a scale id;
+  * the variance normalizer (1 / (sd * win^2)) is precomputed per window by
+    the caller (camera.viola_jones) from the frame ii / ii^2 pair.
+
+This jnp formulation is also the production path on CPU backends; the
+Pallas kernel (kernel.py) is the TPU lowering of the same math.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def haar_stage_scores_ref(ii_flat, base, sid, inv_norm, offsets, weights,
+                          thresholds, polarity, alphas):
+    """Stage score per window.
+
+    ii_flat:    (L,) flattened zero-padded frame integral image.
+    base:       (n,) int32 window top-left flat index, y * (W + 1) + x.
+    sid:        (n,) int32 pyramid-scale id per window.
+    inv_norm:   (n,) f32 per-window 1 / (sd * area).
+    offsets:    (n_scales, sz, K) int32 corner taps per scale.
+    weights:    (sz, K) f32 corner weights (0 in padded slots).
+    thresholds, polarity, alphas: (sz,) decision-stump parameters.
+
+    Returns (n,) f32 sum_k alpha_k * vote_k — the AdaBoost stage score.
+    """
+    off = jnp.take(offsets, sid, axis=0)                 # (n, sz, K)
+    idx = base[:, None, None] + off
+    vals = jnp.take(ii_flat, idx.reshape(-1), axis=0).reshape(idx.shape)
+    resp = jnp.sum(vals * weights[None], axis=-1) * inv_norm[:, None]
+    pred = polarity[None] * jnp.sign(resp - thresholds[None])
+    pred = jnp.where(pred == 0, 1.0, pred)
+    return jnp.sum(pred * alphas[None], axis=-1)

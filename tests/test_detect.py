@@ -1,0 +1,203 @@
+"""Fused detection front-end vs golden oracle + compaction semantics.
+
+Golden-equivalence policy: the fused gather path and the per-window
+reference compute the same math from differently-associated f32 sums
+(frame-level vs per-window integral image), so a window whose stump
+response lands within fp noise of a trained threshold can legitimately
+flip.  The equivalence tests therefore demand *identical* detection sets
+except for windows that are provably fp-borderline (some stump margin
+below 1e-4 of the normalized response), and that those are rare.
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.camera.integral import integral_image
+from repro.camera.synthetic import face_dataset, security_video
+from repro.camera.viola_jones import (
+    BASE,
+    CORNER_SLOTS,
+    FusedDetector,
+    _haar_response,
+    build_gather_tables,
+    build_scan_grid,
+    detect_faces,
+    detect_faces_batch,
+    eval_features,
+    eval_features_scaled,
+    feature_corners,
+    make_feature_pool,
+    scale_feature,
+    train_cascade,
+)
+from repro.core.cascade import capacities_from_counts, compaction_work
+
+SCAN = dict(scale_factor=1.4, step=4.0, adaptive=False)   # coarse: fast oracle
+
+
+@pytest.fixture(scope="module")
+def cascade():
+    X, y, _ = face_dataset(n_per_class=250, seed=0)
+    pool = make_feature_pool(n=200)
+    return train_cascade(X, y, pool, n_stages=6, per_stage=20, seed=0)
+
+
+@pytest.fixture(scope="module")
+def video():
+    frames, truth = security_video(n_frames=6, motion_frames=4, seed=1)
+    return frames, truth
+
+
+class TestFeatureGeometry:
+    def test_scale_identity_at_base(self):
+        for f in make_feature_pool(n=60):
+            assert scale_feature(f, BASE) == f
+
+    def test_scaled_features_stay_inside_and_divisible(self):
+        for f in make_feature_pool(n=60, seed=2):
+            for win in (20, 25, 31, 49, 95, 119):
+                g = scale_feature(f, win)
+                assert 0 <= g.y and g.y + g.h <= win
+                assert 0 <= g.x and g.x + g.w <= win
+                split = g.w if g.kind in (0, 2) else g.h
+                assert split % (2 if g.kind < 2 else 3) == 0
+
+    def test_corner_decomposition_matches_rect_sums(self):
+        """<= 8 corner taps reproduce the 2-/3-rect window-sum arithmetic."""
+        rng = np.random.default_rng(0)
+        for win in (BASE, 31):
+            patches = jnp.asarray(rng.random((4, win, win), np.float32))
+            ii = integral_image(patches)                  # (4, win+1, win+1)
+            iif = np.asarray(ii).reshape(4, -1)
+            stride = win + 1
+            for f in make_feature_pool(n=40, seed=3):
+                g = scale_feature(f, win)
+                want = np.asarray(_haar_response(ii, g))
+                taps = feature_corners(g)
+                assert len(taps) <= CORNER_SLOTS
+                got = sum(wv * iif[:, dy * stride + dx] for dy, dx, wv in taps)
+                np.testing.assert_allclose(got, want, atol=2e-3)
+
+    def test_eval_features_scaled_identity_at_base(self):
+        rng = np.random.default_rng(1)
+        wins = jnp.asarray(rng.random((16, BASE, BASE), np.float32))
+        feats = make_feature_pool(n=30, seed=4)
+        a = eval_features(wins, feats)
+        b = eval_features_scaled(wins, BASE, feats)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def _borderline(cascade, frame, pos, tol=1e-4):
+    """True if the window's cascade decision is fp-ambiguous: some stump
+    response or stage score within ``tol`` of its threshold."""
+    y, x, win = pos
+    patch = jnp.asarray(frame[y:y + win, x:x + win][None])
+    F = np.asarray(eval_features_scaled(patch, win, cascade.feats))[0]
+    if np.min(np.abs(F - cascade.thresholds)) < tol:
+        return True
+    pred = cascade.polarity * np.sign(F - cascade.thresholds)
+    pred[pred == 0] = 1.0
+    weighted = cascade.alphas * pred
+    off = 0
+    for si, size in enumerate(cascade.stage_sizes):
+        score = weighted[off:off + size].sum()
+        if abs(score - cascade.stage_thresholds[si]) < tol:
+            return True
+        if score < cascade.stage_thresholds[si]:
+            break
+        off += size
+    return False
+
+
+class TestGoldenEquivalence:
+    def test_fused_matches_reference_detections(self, cascade, video):
+        frames, _ = video
+        det = FusedDetector(cascade, frames.shape[1], frames.shape[2], **SCAN)
+        det.calibrate(frames[:2])
+        dets, stats = det.detect(frames)
+        assert stats["dropped"] == 0
+        n_diff = 0
+        for i in range(len(frames)):
+            ref, n_inv, _ = detect_faces(cascade, frames[i], SCAN["scale_factor"],
+                                         SCAN["step"], SCAN["adaptive"])
+            assert n_inv == stats["n_windows"]
+            diff = set(ref) ^ set(dets[i])
+            for pos in diff:
+                assert _borderline(cascade, frames[i], pos), (
+                    f"frame {i}: non-borderline mismatch at {pos}")
+            n_diff += len(diff)
+        assert n_diff <= 2   # borderline flips must stay rare
+
+    def test_detect_faces_batch_convenience(self, cascade, video):
+        frames, _ = video
+        dets, stats = detect_faces_batch(cascade, frames[:3], **{
+            "scale_factor": SCAN["scale_factor"], "step": SCAN["step"],
+            "adaptive": SCAN["adaptive"]})
+        assert len(dets) == 3
+        assert stats["dropped"] == 0
+        # cached detector: second call must not rebuild (same object results)
+        dets2, _ = detect_faces_batch(cascade, frames[:3], **{
+            "scale_factor": SCAN["scale_factor"], "step": SCAN["step"],
+            "adaptive": SCAN["adaptive"]})
+        assert dets == dets2
+
+
+class TestCompaction:
+    def test_compacting_matches_masked_at_ample_capacity(self, cascade, video):
+        """compacting_cascade with generous capacities == the masked oracle
+        (full-capacity pass), on the real detector stages."""
+        frames, _ = video
+        h, w = frames.shape[1:]
+        masked = FusedDetector(cascade, h, w, **SCAN)          # full caps
+        n = masked.n_windows
+        caps = [n] + [max(512, n // 8)] * (masked.n_stages - 1)
+        compacted = FusedDetector(cascade, h, w, capacities=caps, **SCAN)
+        m_mask, m_surv, m_drop = (np.asarray(a) for a in masked(frames[:3]))
+        c_mask, c_surv, c_drop = (np.asarray(a) for a in compacted(frames[:3]))
+        assert int(c_drop.sum()) == 0
+        np.testing.assert_array_equal(m_mask, c_mask)
+        np.testing.assert_array_equal(m_surv, c_surv)
+
+    def test_capacity_overflow_drops_are_counted(self, cascade, video):
+        frames, _ = video
+        h, w = frames.shape[1:]
+        masked = FusedDetector(cascade, h, w, **SCAN)
+        _, surv, _ = (np.asarray(a) for a in masked(frames[:2]))
+        if surv[:, 0].max() < 2:
+            pytest.skip("stage 0 rejects everything on this workload")
+        tight = [masked.n_windows] + [1] * (masked.n_stages - 1)
+        det = FusedDetector(cascade, h, w, capacities=tight, **SCAN)
+        mask, _, dropped = (np.asarray(a) for a in det(frames[:2]))
+        assert int(dropped.sum()) > 0
+        assert mask.sum() <= surv[:, -1].sum()
+
+    def test_calibrated_capacities_cover_workload(self, cascade, video):
+        frames, _ = video
+        det = FusedDetector(cascade, frames.shape[1], frames.shape[2], **SCAN)
+        caps = det.calibrate(frames[:2])
+        assert caps[0] == det.n_windows
+        assert all(c <= det.n_windows for c in caps)
+        _, _, dropped = det(frames)
+        assert int(np.asarray(dropped).sum()) == 0
+
+    def test_capacities_from_counts_helper(self):
+        caps = capacities_from_counts(10000, [900, 40, 7], margin=1.5,
+                                      quantum=128)
+        assert caps[0] == 10000
+        assert caps[1] >= int(900 * 1.5) and caps[1] % 128 == 0
+        assert caps[2] >= 128
+        masked, compacted = compaction_work([330, 330, 330], 10000, caps)
+        assert compacted < masked
+
+
+class TestSyntheticRegression:
+    def test_security_video_clamps_motion_frames(self):
+        frames, truth = security_video(n_frames=3, motion_frames=12, seed=0)
+        assert len(frames) == 3
+        assert sum(t["moving"] for t in truth) <= 2
+
+    def test_feature_pool_splits_divisible(self):
+        for f in make_feature_pool(n=120, seed=7):
+            split = f.w if f.kind in (0, 2) else f.h
+            assert split % (2 if f.kind < 2 else 3) == 0
