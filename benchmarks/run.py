@@ -7,7 +7,8 @@ and wall time per section.
 
 ``--json OUT_DIR`` additionally writes each section's rows plus wall time
 to ``OUT_DIR/BENCH_<section>.json`` — the machine-readable perf
-trajectory (BENCH_detect.json carries the fused-front-end speedup).
+trajectory (BENCH_detect.json carries the fused-front-end speedup,
+BENCH_vr.json the fused VR depth-executor speedup).
 """
 
 import argparse
@@ -34,8 +35,10 @@ def _fa():
 
 @section("vr")
 def _vr():
+    # cost-model rows + the measured fused-vs-oracle depth hot path
+    # (BENCH_vr.json carries the §IV speedup acceptance)
     from benchmarks import vr_system
-    return vr_system.rows()
+    return vr_system.rows(measured=True)
 
 
 @section("vj")

@@ -1,16 +1,18 @@
-"""End-to-end §IV pipeline on synthetic stereo: BSSA depth + stitching,
-then the Fig. 14 throughput ladder for CPU/GPU/FPGA placements.
+"""End-to-end §IV pipeline on synthetic stereo: the rig-resident fused
+executor (batched BSSA depth + stereo panorama), then the Fig. 14
+throughput ladder for CPU/GPU/FPGA placements.
 
     PYTHONPATH=src python examples/camera_vr_video.py
 """
 
+import time
+
 import numpy as np
 import jax.numpy as jnp
 
-from repro.camera.bssa import GridSpec, bssa_depth, ms_ssim
+from repro.camera.bssa import GridSpec, ms_ssim
 from repro.camera.pipelines import (
-    VR_FPS_TARGET, VRWorkloadStats, vr_pipeline, vr_profiles)
-from repro.camera.stitch import stereo_panorama, stitch_ring
+    VR_FPS_TARGET, VRRigExecutor, VRWorkloadStats, vr_pipeline, vr_profiles)
 from repro.camera.synthetic import stereo_pair
 from repro.core.costmodel import (
     ARM_A9, ETH_25G, ETH_400G, QUADRO_GPU, VIRTEX_FPGA, ZYNQ_FPGA,
@@ -18,23 +20,26 @@ from repro.core.costmodel import (
 
 
 def main():
-    # 1. depth from a synthetic stereo pair (reduced resolution for CPU)
-    left, right, gt = stereo_pair(h=128, w=160, seed=2)
-    depth = bssa_depth(jnp.asarray(left), jnp.asarray(right),
-                       GridSpec(sigma_spatial=8), max_disp=12, n_iters=8)
-    d, g = np.asarray(depth), gt
+    # 1. an 8-pair rig through the fused executor (reduced resolution for CPU)
+    pairs = [stereo_pair(h=128, w=160, seed=s) for s in range(8)]
+    lefts = jnp.stack([jnp.asarray(p[0]) for p in pairs])
+    rights = jnp.stack([jnp.asarray(p[1]) for p in pairs])
+    ex = VRRigExecutor(GridSpec(sigma_spatial=8), max_disp=12, n_iters=8)
+    lp, rp, depths = ex(lefts, rights)                 # compile + warm
+    t0 = time.time()
+    lp, rp, depths = ex(lefts, rights)
+    lp.block_until_ready()
+    wall = time.time() - t0
+    print(f"[rig] 8-pair frame: {1e3*wall:.1f} ms ({1/wall:.1f} FPS), "
+          f"panorama {lp.shape} x2, "
+          f"finite={bool(jnp.all(jnp.isfinite(lp)) & jnp.all(jnp.isfinite(rp)))}")
+
+    d, g = np.asarray(depths[2]), pairs[2][2]
     q = ms_ssim(jnp.asarray((d - d.min()) / (np.ptp(d) + 1e-9)),
                 jnp.asarray((g - g.min()) / (np.ptp(g) + 1e-9)))
-    print(f"[bssa] depth MS-SSIM vs ground truth: {q:.3f}")
+    print(f"[bssa] fused depth MS-SSIM vs ground truth (pair 2): {q:.3f}")
 
-    # 2. stitch a 4-camera ring + stereo pair synthesis
-    views = [stereo_pair(h=96, w=128, seed=s)[0] for s in range(4)]
-    depths = [jnp.asarray(stereo_pair(h=96, w=128, seed=s)[2]) for s in range(4)]
-    lp, rp = stereo_panorama(views, views, depths)
-    print(f"[stitch] stereo panorama: {lp.shape} x2, "
-          f"finite={bool(jnp.all(jnp.isfinite(lp)))}")
-
-    # 3. Fig. 14 ladder at full 16-camera scale (cost model)
+    # 2. Fig. 14 ladder at full 16-camera scale (cost model)
     pipe = vr_pipeline(VRWorkloadStats())
     print(f"\n[fig14] per-pair pipeline, 25 GbE uplink, target {VR_FPS_TARGET} FPS:")
     for name, dev, cut in [

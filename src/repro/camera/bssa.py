@@ -15,8 +15,11 @@ Pipeline per camera pair (Fig. 10/12):
 4. **Slice** — sample the refined grid back at pixel coordinates.
 
 The blur kernel is the perf-critical unit: kernels/bilateral_blur holds
-the Pallas TPU version; this module is the jnp oracle and the quality
-harness (MS-SSIM vs grid size, Fig. 11b).
+the Pallas TPU version, and :func:`bssa_depth` refines through it (via
+``ops.refine_grid`` backend dispatch).  This module keeps the jnp oracles
+(:func:`rough_disparity_ref`, :func:`refine`, :func:`bssa_depth_ref`) and
+the quality harness (MS-SSIM vs grid size, Fig. 11b); the rig-scale
+batched executor is ``camera.pipelines.VRRigExecutor``.
 """
 
 from __future__ import annotations
@@ -32,14 +35,76 @@ import jax.numpy as jnp
 # ---------------------------------------------------------------------------
 # Rough disparity (block matching)
 # ---------------------------------------------------------------------------
+#
+# Disparity convention (both implementations): hypothesis d aligns
+# ``left[y, x]`` with ``right[y, x - d]`` after shifting the right view d
+# pixels toward higher x — i.e. a pair generated as right[x] = left[x + d]
+# is recovered exactly (pinned by the shifted-pair property test).
 
 
 def rough_disparity(left: jax.Array, right: jax.Array, max_disp: int = 16,
-                    patch: int = 5) -> jax.Array:
-    """Winner-take-all SAD block matching.  (h, w) f32 -> (h, w) f32."""
+                    patch: int = 5, *, hypothesis_chunk: int = 8,
+                    use_pallas: bool | None = None,
+                    interpret: bool = False) -> jax.Array:
+    """Winner-take-all SAD block matching.  (h, w) f32 -> (h, w) f32.
+
+    Fused cost-volume formulation: shifted right views are gathered as one
+    indexed load, their |left - right_d| maps stacked and pushed through a
+    single batched padded integral image (the same unit VJ uses —
+    kernels/integral_image when ``use_pallas``), and the winning hypothesis
+    taken by a vectorized argmin.  The hypothesis axis is blocked into
+    ``hypothesis_chunk``-sized chunks scanned with a running min so the
+    working set stays cache-resident (chunk >= D+1 degenerates to the pure
+    one-shot stack).  Numerically identical to the seed Python loop
+    (:func:`rough_disparity_ref`): same cumsum association per hypothesis,
+    same edge replication, same first-wins tie-breaking.
+    """
+    from repro.camera.integral import frame_integral
+
+    if use_pallas is None:
+        use_pallas = interpret or jax.default_backend() == "tpu"
     h, w = left.shape
     pad = patch // 2
-    lp = jnp.pad(left, pad, mode="edge")
+    n_hyp = max_disp + 1
+    chunk = min(hypothesis_chunk, n_hyp)
+    n_chunks = -(-n_hyp // chunk)
+
+    def sad_chunk(ds):
+        # shifted right views as one gather: rs[d, y, x] = right[y, max(x-d, 0)]
+        # (edge columns replicate, matching the seed's roll + first-column fill)
+        xs = jnp.maximum(jnp.arange(w)[None, :] - ds[:, None], 0)
+        rstack = jnp.moveaxis(right[:, xs], 1, 0)          # (chunk, h, w)
+        diff = jnp.abs(left[None] - rstack)
+        dp = jnp.pad(diff, ((0, 0), (pad, pad), (pad, pad)), mode="edge")
+        ii = frame_integral(dp, use_pallas=use_pallas, interpret=interpret)
+        sad = (ii[:, patch:, patch:] - ii[:, :-patch, patch:]
+               - ii[:, patch:, :-patch] + ii[:, :-patch, :-patch])
+        return sad[:, :h, :w]
+
+    def body(carry, c):
+        best, bestd = carry
+        # clamp the ragged tail to d = max_disp: the duplicates produce
+        # identical SADs and the strict running min keeps the first winner
+        ds = jnp.minimum(c * chunk + jnp.arange(chunk), max_disp)
+        sad = sad_chunk(ds)
+        cmin = jnp.min(sad, axis=0)
+        carg = jnp.argmin(sad, axis=0)
+        better = cmin < best
+        return (jnp.where(better, cmin, best),
+                jnp.where(better, ds[carg], bestd)), None
+
+    init = (jnp.full((h, w), jnp.inf), jnp.zeros((h, w), jnp.int32))
+    (_, bestd), _ = jax.lax.scan(body, init, jnp.arange(n_chunks))
+    return bestd.astype(jnp.float32)
+
+
+def rough_disparity_ref(left: jax.Array, right: jax.Array, max_disp: int = 16,
+                        patch: int = 5) -> jax.Array:
+    """Seed per-hypothesis Python loop — the golden oracle (and the
+    benchmark baseline): materializes D+1 full-frame SAD maps, one integral
+    image each."""
+    h, w = left.shape
+    pad = patch // 2
     costs = []
     for d in range(max_disp + 1):
         rs = jnp.roll(right, d, axis=1)
@@ -175,9 +240,31 @@ def slice_grid(grid_val: jax.Array, grid_wt: jax.Array, img: jax.Array,
 
 
 def bssa_depth(left: jax.Array, right: jax.Array, spec: GridSpec,
-               max_disp: int = 16, n_iters: int = 8):
-    """Full BSSA: rough disparity -> splat -> refine -> slice."""
-    rough = rough_disparity(left, right, max_disp)
+               max_disp: int = 16, n_iters: int = 8, *,
+               use_pallas: bool | None = None, interpret: bool = False):
+    """Full BSSA: fused rough disparity -> splat -> refine_grid -> slice.
+
+    Refinement runs through kernels/bilateral_blur's ``refine_grid``
+    (backend dispatch: the Pallas stencil on TPU, the blur_121 oracle math
+    elsewhere — identical semantics either way, pinned in
+    tests/test_kernels.py).  The end-to-end seed path survives as
+    :func:`bssa_depth_ref`, the golden oracle.
+    """
+    from repro.kernels.bilateral_blur.ops import refine_grid
+
+    rough = rough_disparity(left, right, max_disp, use_pallas=use_pallas,
+                            interpret=interpret)
+    gv, gw = splat(left, rough, spec)
+    gv, gw = refine_grid(gv, gw, n_iters=n_iters, use_pallas=use_pallas,
+                         interpret=interpret)
+    return slice_grid(gv, gw, left, spec)
+
+
+def bssa_depth_ref(left: jax.Array, right: jax.Array, spec: GridSpec,
+                   max_disp: int = 16, n_iters: int = 8):
+    """Seed jnp oracle: Python-loop rough disparity -> splat -> scan refine
+    -> slice.  The benchmark baseline and parity anchor for the fused path."""
+    rough = rough_disparity_ref(left, right, max_disp)
     gv, gw = splat(left, rough, spec)
     gv, gw = refine(gv, gw, n_iters)
     return slice_grid(gv, gw, left, spec)

@@ -223,3 +223,68 @@ def vr_profiles(depth_device: HardwareProfile) -> dict:
     configuration uses the Table II production target (VIRTEX_FPGA)."""
     return {"capture": IMAGE_SENSOR, "isp": ZYNQ_FPGA, "grid": ARM_A9,
             "depth": depth_device, "stitch": ARM_A9}
+
+
+# ---------------------------------------------------------------------------
+# §IV rig-resident fused executor (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+
+class VRRigExecutor:
+    """Batched §IV hot path: vmapped BSSA depth over the rig's camera pairs
+    + loop-free stereo panorama composition.
+
+    Two jit regions per rig frame: ``depth_maps`` (rough -> splat ->
+    refine_grid -> slice, vmapped over pairs; refinement dispatches to the
+    Pallas bilateral-blur kernel on TPU) and ``panorama`` (batched
+    cylindrical warp + one scatter-add feather blend).  With
+    ``rig_parallel`` and enough local devices, pairs are pmapped one per
+    device — the software analogue of the paper's rig of 8 parallel
+    per-pair FPGAs.  The seed per-pair Python loop over ``bssa_depth_ref``
+    is the oracle the benchmark (benchmarks/vr_depth_hotpath.py) and the
+    parity tests measure against.
+    """
+
+    def __init__(self, spec, max_disp: int = 32, n_iters: int = 8,
+                 ipd_px: float = 6.0, use_pallas: bool | None = None,
+                 interpret: bool = False, rig_parallel: bool | None = None):
+        import functools
+
+        import jax
+
+        from repro.camera.bssa import bssa_depth
+        from repro.camera.stitch import stereo_panorama
+
+        self.spec = spec
+        self.max_disp = max_disp
+        self.n_iters = n_iters
+        self.ipd_px = ipd_px
+        if rig_parallel is None:
+            rig_parallel = jax.local_device_count() > 1
+        self.rig_parallel = rig_parallel
+        pair_depth = functools.partial(
+            bssa_depth, spec=spec, max_disp=max_disp, n_iters=n_iters,
+            use_pallas=use_pallas, interpret=interpret)
+        self._depth = jax.jit(jax.vmap(pair_depth))
+        self._depth_pmap = jax.pmap(pair_depth) if rig_parallel else None
+        self._pano = jax.jit(functools.partial(stereo_panorama,
+                                               ipd_px=ipd_px))
+
+    def depth_maps(self, lefts, rights):
+        """(n_pairs, h, w) x2 -> (n_pairs, h, w) refined depth."""
+        import jax
+
+        if (self._depth_pmap is not None
+                and lefts.shape[0] <= jax.local_device_count()):
+            return self._depth_pmap(lefts, rights)
+        return self._depth(lefts, rights)
+
+    def panorama(self, lefts, rights, depths):
+        """(left_pano, right_pano) from per-pair views + depth maps."""
+        return self._pano(lefts, rights, depths)
+
+    def __call__(self, lefts, rights):
+        """Full rig frame: returns (left_pano, right_pano, depths)."""
+        depths = self.depth_maps(lefts, rights)
+        left_pano, right_pano = self.panorama(lefts, rights, depths)
+        return left_pano, right_pano, depths

@@ -6,18 +6,26 @@ computation cost of image stitching is marginal compared to BSSA") but its
 data-reduction step.  We implement a cylindrical-projection stitcher with
 feathered blending over camera seams, enough to measure the real
 bytes-in/bytes-out the cost model uses.
+
+Every stage is batched over the view axis (no per-view Python loops):
+warping is one gather over (n, h, w), blending one scatter-add into the
+canvas — so the whole ring composes inside a single jit region and the
+rig executor (camera.pipelines.VRRigExecutor) can fuse it after the
+vmapped depth stage.
 """
 
 from __future__ import annotations
 
-import numpy as np
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 
 
 def cylindrical_warp(img: jax.Array, f: float) -> jax.Array:
-    """Project an (h, w) image onto a cylinder of focal length f (pixels)."""
-    h, w = img.shape
+    """Project (..., h, w) image(s) onto a cylinder of focal length f
+    (pixels).  Batched: leading axes are carried through the gather."""
+    h, w = img.shape[-2:]
     yc, xc = (h - 1) / 2.0, (w - 1) / 2.0
     ys, xs = jnp.mgrid[0:h, 0:w]
     theta = (xs - xc) / f
@@ -27,49 +35,63 @@ def cylindrical_warp(img: jax.Array, f: float) -> jax.Array:
     x0 = jnp.clip(x_src.astype(jnp.int32), 0, w - 1)
     y0 = jnp.clip(y_src.astype(jnp.int32), 0, h - 1)
     valid = (x_src >= 0) & (x_src < w) & (y_src >= 0) & (y_src < h)
-    return jnp.where(valid, img[y0, x0], 0.0)
+    return jnp.where(valid, img[..., y0, x0], 0.0)
+
+
+def feather_ramp(w: int, overlap: int) -> jax.Array:
+    """Per-tile blend weight profile: linear up / flat / linear down.
+
+    Adjacent tiles overlap by ``overlap`` columns; there the falling ramp of
+    tile i and the rising ramp of tile i+1 sum to exactly 1 (seam
+    continuity — pinned in tests/test_stitch.py)."""
+    return jnp.concatenate([
+        jnp.linspace(0, 1, overlap),
+        jnp.ones(w - 2 * overlap),
+        jnp.linspace(1, 0, overlap),
+    ])
 
 
 def feather_blend(tiles, overlap: int):
     """Blend horizontally-adjacent warped tiles with linear feathering.
 
-    tiles: list of (h, w) arrays; adjacent tiles share ``overlap`` columns.
+    tiles: (n, h, w) array (or list of (h, w) arrays); adjacent tiles share
+    ``overlap`` columns.  One scatter-add builds the canvas and the weight
+    field for all tiles at once.
     """
-    h, w = tiles[0].shape
+    tiles = jnp.asarray(tiles)
+    n, h, w = tiles.shape
     step = w - overlap
-    total_w = step * (len(tiles) - 1) + w
-    canvas = jnp.zeros((h, total_w))
-    weight = jnp.zeros((h, total_w))
-    ramp = jnp.concatenate([
-        jnp.linspace(0, 1, overlap),
-        jnp.ones(w - 2 * overlap),
-        jnp.linspace(1, 0, overlap),
-    ])
-    for i, tile in enumerate(tiles):
-        x0 = i * step
-        canvas = canvas.at[:, x0:x0 + w].add(tile * ramp)
-        weight = weight.at[:, x0:x0 + w].add(ramp)
+    total_w = step * (n - 1) + w
+    ramp = feather_ramp(w, overlap)
+    cols = (jnp.arange(n) * step)[:, None] + jnp.arange(w)[None, :]   # (n, w)
+    weighted = jnp.moveaxis(tiles * ramp, 0, 1).reshape(h, n * w)
+    canvas = jnp.zeros((h, total_w)).at[:, cols.reshape(-1)].add(weighted)
+    weight = jnp.zeros((total_w,)).at[cols.reshape(-1)].add(jnp.tile(ramp, n))
     return canvas / jnp.maximum(weight, 1e-6)
 
 
-def stitch_ring(views, focal: float = None, overlap_frac: float = 0.15):
-    """Stitch a ring of camera views into a panorama strip."""
-    h, w = views[0].shape
+def stitch_ring(views, focal: Optional[float] = None,
+                overlap_frac: float = 0.15):
+    """Stitch a ring of camera views ((n, h, w) or list) into a panorama
+    strip — one batched warp, one batched blend."""
+    views = jnp.asarray(views)
+    h, w = views.shape[-2:]
     f = focal or 0.8 * w
-    warped = [cylindrical_warp(jnp.asarray(v), f) for v in views]
-    overlap = int(w * overlap_frac)
-    return feather_blend(warped, overlap)
+    warped = cylindrical_warp(views, f)
+    return feather_blend(warped, int(w * overlap_frac))
 
 
 def stereo_panorama(left_views, right_views, depths, ipd_px: float = 6.0):
     """Assemble the stereo pair: right-eye views are re-projected by a
-    disparity proportional to inverse depth (view synthesis lite)."""
-    left_pano = stitch_ring(left_views)
-    shifted = []
-    for v, d in zip(right_views, depths):
-        dmax = float(jnp.maximum(jnp.max(d), 1e-6))
-        shift = (ipd_px * (d / dmax)).astype(jnp.int32)
-        xs = jnp.clip(jnp.arange(v.shape[1])[None, :] - shift, 0, v.shape[1] - 1)
-        shifted.append(jnp.take_along_axis(jnp.asarray(v), xs, axis=1))
-    right_pano = stitch_ring(shifted)
-    return left_pano, right_pano
+    disparity proportional to inverse depth (view synthesis lite).  The
+    per-view re-projection is one batched gather, so the whole assembly is
+    jit-compatible (no host round-trip on the depth maxima)."""
+    left_views = jnp.asarray(left_views)
+    right_views = jnp.asarray(right_views)
+    depths = jnp.asarray(depths)                  # (n, h, w)
+    w = right_views.shape[-1]
+    dmax = jnp.maximum(depths.max(axis=(-2, -1), keepdims=True), 1e-6)
+    shift = (ipd_px * depths / dmax).astype(jnp.int32)
+    xs = jnp.clip(jnp.arange(w)[None, None, :] - shift, 0, w - 1)
+    shifted = jnp.take_along_axis(right_views, xs, axis=-1)
+    return stitch_ring(left_views), stitch_ring(shifted)

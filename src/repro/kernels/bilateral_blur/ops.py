@@ -1,5 +1,13 @@
-"""jit'd wrapper: n iterations of the bilateral-grid blur (paper: the BSSA
-refinement loop the FPGA accelerates)."""
+"""Backend dispatch + jit wrapper: n iterations of the bilateral-grid blur
+(paper: the BSSA refinement loop the FPGA accelerates).
+
+Mirrors the haar_frontend dispatch contract: the blur_121 oracle math *is*
+the production path on CPU (XLA fuses the 3-axis stencil well; Pallas
+interpret mode would add per-grid-step Python overhead), while on TPU the
+Pallas kernel keeps both grids VMEM-resident across the halo-exchanged gy
+blocks.  ``interpret=True`` forces the Pallas path in interpreter mode —
+that is what the parity tests pin against ``camera.bssa.refine``.
+"""
 
 from __future__ import annotations
 
@@ -10,16 +18,33 @@ import jax
 from repro.kernels.bilateral_blur.kernel import bilateral_blur_pallas
 
 
-@functools.partial(jax.jit, static_argnames=("n_iters", "block_gy", "interpret"))
+@functools.partial(jax.jit, static_argnames=("n_iters", "block_gy",
+                                             "use_pallas", "interpret"))
 def refine_grid(val, wt, *, n_iters: int = 8, block_gy: int = 32,
-                interpret: bool = False):
-    gy = val.shape[0]
-    bgy = min(block_gy, gy)
-    while gy % bgy:
-        bgy -= 1
+                use_pallas: bool | None = None, interpret: bool = False):
+    """val/wt: (gy, gx, gr) f32 -> n_iters of the normalized-blur iteration.
 
-    def body(i, carry):
-        v, w = carry
-        return bilateral_blur_pallas(v, w, block_gy=bgy, interpret=interpret)
+    Returns the blurred (val, wt) pair — same contract as
+    ``camera.bssa.refine``, which stays the golden oracle.
+    """
+    if use_pallas is None:
+        use_pallas = interpret or jax.default_backend() == "tpu"
+
+    if use_pallas:
+        gy = val.shape[0]
+        bgy = min(block_gy, gy)
+        while gy % bgy:
+            bgy -= 1
+
+        def body(i, carry):
+            v, w = carry
+            return bilateral_blur_pallas(v, w, block_gy=bgy,
+                                         interpret=interpret)
+    else:
+        from repro.camera.bssa import blur_121
+
+        def body(i, carry):
+            v, w = carry
+            return blur_121(v), blur_121(w)
 
     return jax.lax.fori_loop(0, n_iters, body, (val, wt))

@@ -5,10 +5,11 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
+from hypothesis_compat import given, settings, st
 
 from repro.camera.bssa import (
-    GridSpec, blur_121, bssa_depth, ms_ssim, refine, rough_disparity, slice_grid,
-    splat)
+    GridSpec, _grid_coords, blur_121, bssa_depth, bssa_depth_ref, ms_ssim,
+    refine, rough_disparity, rough_disparity_ref, slice_grid, splat)
 from repro.camera.face_nn import (
     classification_error, forward_float, forward_lut, forward_quantized,
     make_sigmoid_lut, nn_power, train_face_nn)
@@ -150,3 +151,124 @@ class TestBSSA:
     def test_msssim_identity(self):
         a = jnp.asarray(np.random.default_rng(0).random((64, 64), np.float32))
         assert ms_ssim(a, a) > 0.99
+
+
+class TestBSSAFusedParity:
+    """The fused cost-volume path vs the seed loop oracles (PR acceptance:
+    same argmin disparities up to fp-borderline ties, depth within tol)."""
+
+    def test_rough_fused_equals_seed_loop(self):
+        left, right, _ = stereo_pair(h=72, w=96, seed=4)
+        a = np.asarray(rough_disparity(jnp.asarray(left), jnp.asarray(right), 12))
+        b = np.asarray(rough_disparity_ref(jnp.asarray(left), jnp.asarray(right), 12))
+        assert (a == b).mean() >= 0.999
+
+    @pytest.mark.parametrize("chunk", [1, 4, 64])
+    def test_rough_chunk_sizes_agree(self, chunk):
+        """chunk=1 (pure running-min scan) through chunk>=D+1 (the pure
+        one-shot stack) are the same computation."""
+        left, right, _ = stereo_pair(h=48, w=64, seed=5)
+        l, r = jnp.asarray(left), jnp.asarray(right)
+        a = np.asarray(rough_disparity(l, r, 12, hypothesis_chunk=chunk))
+        b = np.asarray(rough_disparity_ref(l, r, 12))
+        assert (a == b).mean() >= 0.999
+
+    def test_rough_pallas_integral_matches(self):
+        """interpret=True routes the cost-volume integral through the
+        Pallas streaming kernel — same winners up to fp-borderline ties
+        (the blocked integral carries a ~1e-3 association tolerance, so the
+        pair must have well-separated SAD minima: iid noise, constant
+        shift; smooth low-contrast regions would tie)."""
+        rng = np.random.default_rng(7)
+        full = rng.random((40, 60), np.float32)
+        left = jnp.asarray(full[:, :48])
+        right = jnp.asarray(full[:, 3:51])     # right[x] = left[x+3]
+        a = np.asarray(rough_disparity(left, right, 8, interpret=True))
+        b = np.asarray(rough_disparity_ref(left, right, 8))
+        inner = (a == b)[2:-2, 10:-10]         # clamped borders can tie
+        assert inner.mean() >= 0.99
+
+    def test_bssa_depth_fused_matches_oracle(self):
+        left, right, _ = stereo_pair(h=64, w=80, seed=6)
+        spec = GridSpec(sigma_spatial=8)
+        a = bssa_depth(jnp.asarray(left), jnp.asarray(right), spec,
+                       max_disp=10, n_iters=6)
+        b = bssa_depth_ref(jnp.asarray(left), jnp.asarray(right), spec,
+                           max_disp=10, n_iters=6)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+class TestBSSAProperties:
+    """Property tests for the bilateral-grid operators (satellite: splat/
+    slice adjointness + mass conservation, blur normalization, rough
+    disparity shift recovery)."""
+
+    @given(st.integers(24, 56), st.integers(24, 56))
+    @settings(max_examples=6, deadline=None)
+    def test_splat_mass_conservation(self, h, w):
+        rng = np.random.default_rng(100 * h + w)
+        img = jnp.asarray(rng.random((h, w), np.float32))
+        vals = jnp.asarray(rng.random((h, w), np.float32))
+        gv, gw = splat(img, vals, GridSpec(sigma_spatial=8))
+        assert float(gw.sum()) == pytest.approx(h * w, rel=1e-5)
+        assert float(gv.sum()) == pytest.approx(float(vals.sum()), rel=1e-4)
+
+    @given(st.integers(24, 48), st.integers(24, 48))
+    @settings(max_examples=4, deadline=None)
+    def test_splat_nearest_slice_adjoint(self, h, w):
+        """<splat(v), G> == <v, G[nearest vertex]> for any grid field G:
+        splat is exactly the adjoint of nearest-vertex sampling."""
+        rng = np.random.default_rng(37 * h + w)
+        spec = GridSpec(sigma_spatial=8)
+        img = jnp.asarray(rng.random((h, w), np.float32))
+        vals = jnp.asarray(rng.random((h, w), np.float32))
+        gv, _ = splat(img, vals, spec)
+        G = jnp.asarray(rng.random(gv.shape, np.float32))
+        gy, gx, gr = gv.shape
+        cy, cx, cr = _grid_coords(img, spec)
+        iy = jnp.clip(jnp.round(cy).astype(jnp.int32), 0, gy - 1)
+        ix = jnp.clip(jnp.round(cx).astype(jnp.int32), 0, gx - 1)
+        ir = jnp.clip(jnp.round(cr).astype(jnp.int32), 0, gr - 1)
+        lhs = float(jnp.sum(gv * G))
+        rhs = float(jnp.sum(vals.reshape(-1) * G[iy, ix, ir]))
+        assert lhs == pytest.approx(rhs, rel=1e-4)
+
+    def test_slice_partition_of_unity(self):
+        """Slicing a constant grid returns the constant everywhere — the
+        trilinear weights normalize out."""
+        spec = GridSpec(sigma_spatial=8)
+        img = jnp.asarray(np.random.default_rng(0).random((48, 64), np.float32))
+        gy, gx, gr = spec.dims(48, 64)
+        gw = jnp.ones((gy, gx, gr))
+        out = slice_grid(3.5 * gw, gw, img, spec)
+        np.testing.assert_allclose(np.asarray(out), 3.5, atol=1e-5)
+
+    @given(st.integers(6, 24), st.integers(6, 24))
+    @settings(max_examples=6, deadline=None)
+    def test_blur_121_weight_normalization(self, gy, gx):
+        """DC gain 1 at every vertex (weights sum to 1, edges included) and
+        exact mass conservation for interior-supported fields."""
+        ones = jnp.ones((gy, gx, 9))
+        np.testing.assert_allclose(np.asarray(blur_121(ones)), 1.0, atol=1e-6)
+        rng = np.random.default_rng(13 * gy + gx)
+        core = np.zeros((gy, gx, 9), np.float32)
+        core[1:-1, 1:-1, 1:-1] = rng.random((gy - 2, gx - 2, 7))
+        blurred = blur_121(jnp.asarray(core))
+        assert float(blurred.sum()) == pytest.approx(float(core.sum()), rel=1e-5)
+
+    @given(st.integers(2, 9))
+    @settings(max_examples=6, deadline=None)
+    def test_rough_disparity_recovers_injected_shift(self, s):
+        """A pair built with right[x] = left[x+s] (the module's disparity
+        convention) is recovered exactly away from the borders."""
+        rng = np.random.default_rng(s)
+        h, w, max_disp, patch = 40, 120, 12, 5
+        base = rng.random((h, w + 16)).astype(np.float32)
+        k = np.ones(7) / 7          # smooth so neighboring lags separate
+        full = np.stack([np.convolve(row, k, "same") for row in base])
+        left = jnp.asarray(full[:, :w])
+        right = jnp.asarray(full[:, s:s + w])
+        d = np.asarray(rough_disparity(left, right, max_disp, patch))
+        pad = patch // 2
+        inner = d[pad:-pad, max_disp + pad:-(max_disp + pad)]
+        assert (inner == s).mean() >= 0.98

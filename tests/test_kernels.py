@@ -195,6 +195,37 @@ class TestBilateralBlur:
         va, _ = bilateral_blur_pallas(val, wt, block_gy=16, interpret=True)
         np.testing.assert_allclose(np.asarray(va), 1.0, atol=1e-6)
 
+    @pytest.mark.parametrize("shape,n_iters", [
+        ((32, 24, 17), 2),      # divisible: two 16-row blocks
+        ((30, 12, 9), 3),       # 30 % 16 != 0 -> block_gy falls back to 15
+        ((17, 10, 9), 2),       # prime gy -> single full-height block
+        ((20, 16, 9), 1),       # 20 % 16 != 0 -> falls back to 10
+    ])
+    def test_refine_grid_matches_refine_oracle(self, shape, n_iters):
+        """The wired refinement unit (ops.refine_grid, Pallas interpret) ==
+        bssa.refine across grid shapes, including heights not divisible by
+        block_gy — the dispatch bssa_depth now runs through."""
+        from repro.camera.bssa import refine
+        from repro.kernels.bilateral_blur.ops import refine_grid
+        val = jax.random.normal(jax.random.PRNGKey(0), shape)
+        wt = jax.random.uniform(jax.random.PRNGKey(1), shape)
+        va, wa = refine_grid(val, wt, n_iters=n_iters, block_gy=16,
+                             interpret=True)
+        vb, wb = refine(val, wt, n_iters)
+        np.testing.assert_allclose(np.asarray(va), np.asarray(vb), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(wa), np.asarray(wb), atol=1e-5)
+
+    def test_refine_grid_jnp_backend_matches_oracle(self):
+        """The CPU dispatch path (use_pallas=False) is the same math."""
+        from repro.camera.bssa import refine
+        from repro.kernels.bilateral_blur.ops import refine_grid
+        val = jax.random.normal(jax.random.PRNGKey(2), (18, 31, 17))
+        wt = jax.random.uniform(jax.random.PRNGKey(3), (18, 31, 17))
+        va, wa = refine_grid(val, wt, n_iters=4, use_pallas=False)
+        vb, wb = refine(val, wt, 4)
+        np.testing.assert_allclose(np.asarray(va), np.asarray(vb), atol=1e-6)
+        np.testing.assert_allclose(np.asarray(wa), np.asarray(wb), atol=1e-6)
+
 
 class TestQuantMatmul:
     @pytest.mark.parametrize("m,k,n", [(64, 400, 8), (128, 128, 128),

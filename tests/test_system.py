@@ -17,8 +17,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.camera.pipelines import (
-    FAWorkloadStats, VRWorkloadStats, calibrate_fa, fa_pipeline, fa_profiles,
-    vr_pipeline, vr_profiles)
+    FAWorkloadStats, VRRigExecutor, VRWorkloadStats, calibrate_fa,
+    fa_pipeline, fa_profiles, vr_pipeline, vr_profiles)
 from repro.configs.registry import SMOKE_CONFIGS
 from repro.core.costmodel import (
     ARM_A9, ETH_25G, ETH_400G, HardwareProfile, VIRTEX_FPGA, ZYNQ_FPGA,
@@ -68,6 +68,46 @@ class TestPaperDecisions:
         raw = 16 * pipe.cut_payload_bytes(0) / 2
         assert ETH_25G.link_bw / raw < 30.0       # must process in-camera
         assert ETH_400G.link_bw / raw > 300.0     # offload wins again (~395)
+
+    def test_vr_measured_fps_ordering_matches_fig14(self):
+        """The measured fused-executor-vs-seed-oracle FPS direction must
+        agree with the fig14 ladder direction (accelerated depth wins) —
+        so cost model and measurement can't silently diverge."""
+        import time
+
+        from repro.camera.bssa import GridSpec, bssa_depth_ref
+        from repro.camera.synthetic import stereo_pair
+
+        pairs = [stereo_pair(h=48, w=64, seed=s) for s in range(2)]
+        lefts = jnp.stack([jnp.asarray(p[0]) for p in pairs])
+        rights = jnp.stack([jnp.asarray(p[1]) for p in pairs])
+        spec = GridSpec(sigma_spatial=8)
+
+        ex = VRRigExecutor(spec, max_disp=8, n_iters=4)
+        ex.depth_maps(lefts, rights).block_until_ready()   # compile + warm
+        t0 = time.time()
+        ex.depth_maps(lefts, rights).block_until_ready()
+        fused_fps = 2 / (time.time() - t0)
+
+        bssa_depth_ref(lefts[0], rights[0], spec, 8, 4).block_until_ready()
+        t0 = time.time()
+        for i in range(2):
+            o = bssa_depth_ref(lefts[i], rights[i], spec, 8, 4)
+        o.block_until_ready()
+        oracle_fps = 2 / (time.time() - t0)
+
+        pipe = vr_pipeline(VRWorkloadStats())
+        model_fps = {}
+        for name, dev in [("cpu_depth", ARM_A9), ("fpga_depth", VIRTEX_FPGA)]:
+            rep = throughput_cost(pipe, vr_profiles(dev), ETH_25G, "stitch")
+            comm = ETH_25G.link_bw / (8 * pipe.cut_payload_bytes(
+                pipe.index("stitch")))
+            model_fps[name] = min(rep.compute_fps, comm)
+
+        model_says_accel_wins = model_fps["fpga_depth"] > model_fps["cpu_depth"]
+        measured_says_accel_wins = fused_fps > oracle_fps
+        assert measured_says_accel_wins == model_says_accel_wins
+        assert model_says_accel_wins        # fig14: only FPGA BSSA is real-time
 
 
 class TestServing:
