@@ -23,34 +23,37 @@ import time
 import numpy as np
 import jax.numpy as jnp
 
-from repro.camera.synthetic import face_dataset, security_video
+from repro.camera.synthetic import security_video
 from repro.camera.viola_jones import (
     FusedDetector, cascade_apply, detect_faces, extract_windows,
-    harvest_hard_negatives, make_feature_pool, scan_positions, train_cascade)
+    scan_positions)
 from repro.core.cascade import compaction_work
 
 
-def _detect_seed_path(casc, frame):
+def _detect_seed_path(casc, frame, scan=(1.25, 0.025, True)):
     """The seed repo's detect_faces dataflow, kept verbatim for old-vs-new
     timing (resample-to-20x20 semantics; superseded by scaled features)."""
-    pos = scan_positions(frame.shape[0], frame.shape[1], 1.25, 0.025, True)
+    pos = scan_positions(frame.shape[0], frame.shape[1], *scan)
     wins = extract_windows(frame, pos)
     accepted, _ = cascade_apply(casc, jnp.asarray(wins))
     return [pos[i] for i in np.where(np.asarray(accepted))[0]]
 
 
-def rows(n_old_frames: int = 2, n_ref_frames: int = 2):
+def rows(n_old_frames: int = 2, n_ref_frames: int = 2, smoke: bool = False):
     out = []
-    frames, truth = security_video()
-    X, y, _ = face_dataset(n_per_class=400, seed=3)
-    neg = harvest_hard_negatives(frames, truth)
-    X = np.concatenate([X, neg])
-    y = np.concatenate([y, np.zeros(len(neg), np.int32)])
-    casc = train_cascade(X, y, make_feature_pool(n=250), n_stages=10,
-                         per_stage=33, seed=0)
+    from benchmarks.workloads import fa_cascade, fa_scan
+    if smoke:
+        frames, truth = security_video(n_frames=6, motion_frames=3, seed=1)
+        casc = fa_cascade(smoke=True)
+        n_old_frames = n_ref_frames = 1
+    else:
+        frames, truth = security_video()
+        casc = fa_cascade(frames=frames, truth=truth)
+    scan = fa_scan(smoke)
 
     h, w = frames.shape[1:]
-    det = FusedDetector(casc, h, w)
+    det = FusedDetector(casc, h, w, scale_factor=scan[0], step=scan[1],
+                        adaptive=scan[2])
     det.calibrate(frames[:4])
     det.detect(frames)                       # compile + warm
     t0 = time.time()
@@ -59,11 +62,11 @@ def rows(n_old_frames: int = 2, n_ref_frames: int = 2):
 
     t0 = time.time()
     for i in range(n_old_frames):
-        _detect_seed_path(casc, frames[i])
+        _detect_seed_path(casc, frames[i], scan)
     old_fps = n_old_frames / (time.time() - t0)
 
     t0 = time.time()
-    ref_sets = {i: set(detect_faces(casc, frames[i])[0])
+    ref_sets = {i: set(detect_faces(casc, frames[i], *scan)[0])
                 for i in range(n_ref_frames)}
     ref_fps = n_ref_frames / (time.time() - t0)
 

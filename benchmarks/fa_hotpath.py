@@ -1,0 +1,282 @@
+"""§III frame-to-auth hot path: seed per-motion-frame Python loop vs the
+single-dispatch streaming executor (BENCH_fa_hotpath.json).
+
+Timed configurations on the paper's 176x144 security workload:
+
+  oracle   — the seed-era funnel, one motion frame at a time in Python:
+             materialize EVERY scanning window (``extract_windows``),
+             per-window integral images through ``cascade_apply``, then
+             numpy crops of the detections and the float fake-quantized
+             NN (``forward_quantized``) — host round-trips between every
+             stage.  Timed warm on a few motion frames and extrapolated
+             (the full video takes minutes), like vr_depth_hotpath's
+             oracle pairs.
+  hostloop — the pre-executor production path (what the example shipped
+             between PR 2 and this PR): batched ``FusedDetector.detect``
+             for VJ, but windows still cropped on numpy per frame and the
+             NN still eager fake-quantization on host.
+  fused    — ``FaceAuthExecutor``: motion gate, frame compaction, fused
+             detection, capacity-padded window gathers and the int8
+             Pallas-kernel NN tail in ONE jit dispatch per batch.
+  multi    — the same executor vmapped over N independent camera streams
+             on one device, and (subprocess, one stream per device — the
+             WISPCam-fleet shape) pmapped across 8 host devices.
+
+Funnel parity is part of the benchmark: the executor must report
+*identical* motion/window/auth counts to the host loop (the loop's NN
+re-run through ``nn_forward_quantized`` for the count comparison, since
+int8-vs-fake-quant scores differ at the ~1e-2 level, which the score
+rows report explicitly).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.timing import run_json_child, timed as _timed
+
+N_STREAMS = 4                      # vmap fleet on one device
+N_DEVICES = 8                      # pmap fleet (subprocess)
+
+
+def _workload(smoke: bool = False):
+    from benchmarks.workloads import fa_cascade, fa_scan
+    from repro.camera.face_nn import train_face_nn
+    from repro.camera.synthetic import face_dataset, security_video
+
+    if smoke:
+        frames, truth = security_video(n_frames=10, motion_frames=5, seed=1)
+        casc = fa_cascade(smoke=True)
+        X, y, _ = face_dataset(n_per_class=80, seed=3)
+        nn = train_face_nn(X, y, steps=60)
+    else:
+        frames, truth = security_video()
+        casc = fa_cascade(frames=frames, truth=truth)
+        X, y, _ = face_dataset(n_per_class=400, seed=3)
+        nn = train_face_nn(X, y, steps=1500)
+    sf, st, ad = fa_scan(smoke)
+    return frames, casc, nn, dict(scale_factor=sf, step=st, adaptive=ad)
+
+
+def _save_workload(path, frames, casc, nn, scan):
+    """Serialize (cascade, nn, frames) so the pmap child skips retraining."""
+    np.savez(
+        path, frames=frames,
+        feats=np.array([(f.kind, f.y, f.x, f.h, f.w) for f in casc.feats],
+                       np.int32),
+        thresholds=casc.thresholds, polarity=casc.polarity,
+        alphas=casc.alphas, stage_sizes=np.array(casc.stage_sizes),
+        stage_thresholds=casc.stage_thresholds,
+        w1=np.asarray(nn.w1), b1=np.asarray(nn.b1),
+        w2=np.asarray(nn.w2), b2=np.asarray(nn.b2),
+        scan=np.array([scan["scale_factor"], scan["step"],
+                       float(scan["adaptive"])]))
+
+
+def _load_workload(path):
+    import jax.numpy as jnp
+
+    from repro.camera.face_nn import FaceNN
+    from repro.camera.viola_jones import Cascade, HaarFeature
+
+    z = np.load(path)
+    casc = Cascade(
+        feats=[HaarFeature(*map(int, row)) for row in z["feats"]],
+        thresholds=z["thresholds"], polarity=z["polarity"],
+        alphas=z["alphas"], stage_sizes=[int(s) for s in z["stage_sizes"]],
+        stage_thresholds=z["stage_thresholds"])
+    nn = FaceNN(w1=jnp.asarray(z["w1"]), b1=jnp.asarray(z["b1"]),
+                w2=jnp.asarray(z["w2"]), b2=jnp.asarray(z["b2"]))
+    sf, st, ad = z["scan"]
+    scan = dict(scale_factor=float(sf), step=float(st), adaptive=bool(ad))
+    return z["frames"], casc, nn, scan
+
+
+def _fleet_child():
+    """Runs under --xla_force_host_platform_device_count=8: one stream per
+    device through the pmapped executor; prints one JSON line."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.camera.pipelines import FaceAuthExecutor
+
+    frames, casc, nn, scan = _load_workload(sys.argv[-1])
+    ex = FaceAuthExecutor(casc, nn, frames.shape[1], frames.shape[2], **scan)
+    ex.calibrate(frames)
+    streams = jnp.stack([jnp.asarray(np.roll(frames, 5 * s, axis=0))
+                         for s in range(N_DEVICES)])
+    t, _ = _timed(lambda: ex.run_streams(streams))
+    print(json.dumps({
+        "fleet_ms": 1e3 * t, "n_devices": jax.local_device_count(),
+        "frames_per_s": N_DEVICES * len(frames) / t}))
+
+
+def _fleet_ms(frames, casc, nn, scan):
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "workload.npz")
+        _save_workload(path, frames, casc, nn, scan)
+        return run_json_child(
+            ["benchmarks.fa_hotpath", "--fleet-child", path],
+            n_devices=N_DEVICES)
+
+
+def rows(smoke: bool = False, n_oracle_frames: int = 2):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.camera.face_nn import forward_quantized, make_sigmoid_lut
+    from repro.camera.pipelines import FaceAuthExecutor
+    from repro.camera.viola_jones import (
+        cascade_apply, extract_windows, scan_positions)
+    from repro.kernels.quant_matmul.ops import nn_forward_quantized
+
+    out = []
+    frames, casc, nn, scan = _workload(smoke)
+    lut, meta = make_sigmoid_lut()
+    h, w = frames.shape[1:]
+
+    # ---- fused: the streaming executor, one dispatch per batch --------------
+    ex = FaceAuthExecutor(casc, nn, h, w, **scan)
+    fcap, wcap, caps = ex.calibrate(frames)
+    fj = jnp.asarray(frames)
+    t_fused, res = _timed(lambda: ex(fj))
+    fused_ms = 1e3 * t_fused / len(frames)
+
+    # ---- multi-stream: vmapped fleet on one device --------------------------
+    streams = jnp.stack([jnp.asarray(np.roll(frames, 5 * s, axis=0))
+                         for s in range(N_STREAMS)])
+    t_multi, _ = _timed(lambda: ex.run_streams(streams))
+    multi_fps = N_STREAMS * len(frames) / t_multi
+
+    # ---- pmap fleet: one stream per device (subprocess) ---------------------
+    fleet = None if smoke else _fleet_ms(frames, casc, nn, scan)
+
+    # ---- hostloop: the pre-executor production path -------------------------
+    from benchmarks.workloads import host_loop_funnel
+
+    fq_fn = lambda x: forward_quantized(nn, jnp.asarray(x), 8, lut, meta)
+    int8_fn = lambda x: nn_forward_quantized(ex.qnn, jnp.asarray(x), lut,
+                                             meta, use_pallas=False)
+    host_loop_funnel(ex, frames, fq_fn)            # warm (compile det batch)
+    t_host, _ = _timed(lambda: host_loop_funnel(ex, frames, fq_fn), reps=2)
+    host_ms = 1e3 * t_host / len(frames)
+
+    # parity uses the SAME int8 datapath on the host loop (fake-quant scores
+    # differ from int8 at the 1e-2 level; reported separately below); one
+    # shared detection/crop pass feeds both NNs
+    mask, n_win_l, n_auth_l, s_int8, prep = host_loop_funnel(
+        ex, frames, int8_fn)
+    midx = np.where(mask)[0]
+    _, _, _, s_fq, _ = host_loop_funnel(ex, frames, fq_fn, prepared=prep)
+
+    # ---- oracle: the seed per-motion-frame Python funnel --------------------
+    pos = scan_positions(h, w, scan["scale_factor"], scan["step"],
+                         scan["adaptive"])
+    n_orc = min(n_oracle_frames, len(midx)) or 1
+    orc_idx = midx[:n_orc] if len(midx) else [1]
+
+    def oracle_frame(i):
+        wins = extract_windows(frames[i], pos)
+        accepted, _ = cascade_apply(casc, jnp.asarray(wins))
+        dets = [pos[k] for k in np.where(np.asarray(accepted))[0]]
+        if dets:
+            crops = extract_windows(frames[i], dets)
+            np.asarray(forward_quantized(
+                nn, jnp.asarray(crops.reshape(len(crops), -1)), 8, lut, meta))
+        return dets
+
+    oracle_frame(int(orc_idx[0]))                       # warm per-op caches
+    t0 = time.time()
+    for i in orc_idx:
+        oracle_frame(int(i))
+    t_orc_motion = (time.time() - t0) / n_orc
+    # amortized per source frame: only motion frames pay the funnel
+    oracle_ms = 1e3 * t_orc_motion * len(midx) / len(frames)
+
+    # ---- parity -------------------------------------------------------------
+    r_motion = np.asarray(res.motion)
+    r_nwin = np.asarray(res.n_windows)
+    r_nauth = np.asarray(res.n_auth)
+    score_diff = 0.0
+    fq_diff = 0.0
+    for i in s_int8:
+        v = np.asarray(res.window_valid[i])
+        se = np.sort(np.asarray(res.scores[i])[v])
+        score_diff = max(score_diff,
+                         float(np.abs(se - np.sort(s_int8[i])).max()))
+        fq_diff = max(fq_diff,
+                      float(np.abs(np.sort(s_fq[i]) - np.sort(s_int8[i])).max()))
+    parity = (np.array_equal(r_motion, mask)
+              and np.array_equal(r_nwin, n_win_l)
+              and np.array_equal(r_nauth, n_auth_l))
+
+    # ---- rows ---------------------------------------------------------------
+    out.append(("fa_hotpath", "workload",
+                f"{len(frames)}x{h}x{w}, {len(midx)} motion, "
+                f"{int(r_nwin.sum())} windows, {int(r_nauth.sum())} auth",
+                f"scan={scan} capacities f={fcap} w={wcap} vj={caps}"))
+    out.append(("fa_hotpath", "oracle_ms_per_frame", f"{oracle_ms:.1f}",
+                f"seed per-motion-frame loop (extract_windows + "
+                f"cascade_apply + fake-quant NN), {n_orc} frames timed"))
+    out.append(("fa_hotpath", "hostloop_ms_per_frame", f"{host_ms:.2f}",
+                "pre-executor path: batched FusedDetector + numpy crops + "
+                "eager fake-quant NN"))
+    out.append(("fa_hotpath", "fused_ms_per_frame", f"{fused_ms:.2f}",
+                "FaceAuthExecutor, one jit dispatch per batch"))
+    out.append(("fa_hotpath", "speedup_vs_oracle",
+                f"{oracle_ms / fused_ms:.1f}x", "acceptance: >= 10x"))
+    out.append(("fa_hotpath", "speedup_vs_hostloop",
+                f"{host_ms / fused_ms:.1f}x",
+                "both share the fused detector, so single-stream is "
+                "detection-compute-bound and ~1x is expected on a CPU host "
+                "(the executor pays frame-capacity padding, the loop pays "
+                "host syncs); the executor's win is the multi-stream rows"))
+    out.append(("fa_hotpath", "single_stream_fps", f"{1e3 / fused_ms:.0f}",
+                f"source rate is 1 FPS/camera -> one device sustains "
+                f"~{1e3 / fused_ms:.0f} cameras"))
+    out.append(("fa_hotpath", "multi_stream_fps_vmap", f"{multi_fps:.0f}",
+                f"{N_STREAMS} feeds vmapped on one device"))
+    if fleet:
+        out.append(("fa_hotpath", "multi_stream_fps_pmap",
+                    f"{fleet['frames_per_s']:.0f}",
+                    f"{N_DEVICES} feeds, one per device "
+                    f"({fleet['n_devices']} host devices)"))
+    elif not smoke:
+        out.append(("fa_hotpath", "multi_stream_fps_pmap", "unavailable",
+                    "fleet subprocess failed; vmap row above is the "
+                    "multi-stream number"))
+    out.append(("fa_hotpath", "funnel_count_parity",
+                "identical" if parity else "MISMATCH",
+                "motion/window/auth counts, executor vs host loop "
+                "(int8 NN on both)"))
+    out.append(("fa_hotpath", "score_parity_int8",
+                f"{score_diff:.2e}",
+                "executor vs host-loop nn_forward_quantized (same datapath)"))
+    out.append(("fa_hotpath", "score_delta_vs_fake_quant", f"{fq_diff:.3f}",
+                "int8 static scales vs forward_quantized per-tensor "
+                "fake-quant — the quantization-scheme gap, not an error"))
+    out.append(("fa_hotpath", "capacity_drops",
+                f"motion={int(np.asarray(res.motion_dropped))} "
+                f"windows={int(np.asarray(res.windows_dropped).sum())} "
+                f"cascade={int(np.asarray(res.cascade_dropped).sum())}",
+                "0 = calibrated capacities lossless on this workload"))
+    return out
+
+
+def main():
+    if "--fleet-child" in sys.argv:
+        _fleet_child()
+        return
+    smoke = "--smoke" in sys.argv
+    for row in rows(smoke=smoke):
+        print(",".join(str(c) for c in row))
+
+
+if __name__ == "__main__":
+    main()

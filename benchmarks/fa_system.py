@@ -39,7 +39,9 @@ from repro.core.costmodel import (
 from repro.core.placement import solve_cut
 
 
-def rows():
+def rows(smoke: bool = False):
+    """``smoke=True`` keeps every row but measures the funnel on a toy
+    cascade/video (seconds, offline) — CI liveness, not quotable numbers."""
     out = []
     stats = FAWorkloadStats()
     cal = calibrate_fa(stats)
@@ -143,26 +145,24 @@ def rows():
                 f"implied window~pixels^{gamma:.2f} to match paper's 8 MP"))
 
     # ---- workload funnel (measured, end-to-end) -----------------------------
-    from repro.camera.synthetic import security_video
+    from benchmarks.workloads import fa_cascade, fa_scan
     from repro.camera.motion import motion_mask
-    from repro.camera.synthetic import face_dataset
-    from repro.camera.viola_jones import (
-        harvest_hard_negatives, make_feature_pool, train_cascade,
-        detect_faces_batch)
-    frames, truth = security_video()
+    from repro.camera.synthetic import security_video
+    from repro.camera.viola_jones import detect_faces_batch
+    if smoke:
+        frames, truth = security_video(n_frames=10, motion_frames=5, seed=1)
+        casc = fa_cascade(smoke=True)
+    else:
+        frames, truth = security_video()
+        casc = fa_cascade(frames=frames, truth=truth)
+    scan = fa_scan(smoke)
     mask, _ = motion_mask(jnp.asarray(frames), threshold=0.004)
     mask = np.asarray(mask)
-    X, y, _ = face_dataset(n_per_class=400, seed=3)
-    neg = harvest_hard_negatives(frames, truth)
-    X = np.concatenate([X, neg])
-    y = np.concatenate([y, np.zeros(len(neg), np.int32)])
-    pool = make_feature_pool(n=250)
-    casc = train_cascade(X, y, pool, n_stages=10, per_stage=33, seed=0)
 
     def funnel(strictness):
         midx = np.where(mask)[0]
         dets_all, _stats = detect_faces_batch(
-            casc, frames[midx], 1.25, 0.025, True, strictness=strictness)
+            casc, frames[midx], *scan, strictness=strictness)
         if _stats["dropped"]:
             # capacity overflow would silently shrink the funnel: redo with
             # the masked oracle (full capacities), frame at a time

@@ -3,12 +3,19 @@ assignment's roofline report.  Prints ``table,name,value,note`` CSV rows
 and wall time per section.
 
     PYTHONPATH=src python -m benchmarks.run \
-        [--only fa,vr,vj,nn,bssa,roofline,detect] [--json OUT_DIR]
+        [--only fa,vr,vj,nn,bssa,roofline,detect,fa_hotpath] \
+        [--json OUT_DIR] [--smoke]
 
 ``--json OUT_DIR`` additionally writes each section's rows plus wall time
 to ``OUT_DIR/BENCH_<section>.json`` — the machine-readable perf
 trajectory (BENCH_detect.json carries the fused-front-end speedup,
-BENCH_vr.json the fused VR depth-executor speedup).
+BENCH_vr.json the fused VR depth-executor speedup, BENCH_fa_hotpath.json
+the §III streaming-executor speedup).
+
+``--smoke`` runs EVERY section at toy sizes, fully offline and on a few
+seconds' budget each — the CI probe (tests/test_bench_smoke.py) that
+keeps benchmark code from bit-rotting between releases.  Smoke rows are
+for liveness, not for quoting numbers.
 """
 
 import argparse
@@ -28,47 +35,53 @@ def section(name):
 
 
 @section("fa")
-def _fa():
+def _fa(smoke=False):
     from benchmarks import fa_system
-    return fa_system.rows()
+    return fa_system.rows(smoke=smoke)
 
 
 @section("vr")
-def _vr():
+def _vr(smoke=False):
     # cost-model rows + the measured fused-vs-oracle depth hot path
     # (BENCH_vr.json carries the §IV speedup acceptance)
     from benchmarks import vr_system
-    return vr_system.rows(measured=True)
+    return vr_system.rows(measured=True, smoke=smoke)
 
 
 @section("vj")
-def _vj():
+def _vj(smoke=False):
     from benchmarks import vj_tradeoffs
-    return vj_tradeoffs.rows()
+    return vj_tradeoffs.rows(smoke=smoke)
 
 
 @section("nn")
-def _nn():
+def _nn(smoke=False):
     from benchmarks import face_nn_tradeoffs
-    return face_nn_tradeoffs.rows()
+    return face_nn_tradeoffs.rows(smoke=smoke)
 
 
 @section("bssa")
-def _bssa():
+def _bssa(smoke=False):
     from benchmarks import bssa_quality
-    return bssa_quality.rows()
+    return bssa_quality.rows(smoke=smoke)
 
 
 @section("detect")
-def _detect():
+def _detect(smoke=False):
     from benchmarks import detect_hotpath
-    return detect_hotpath.rows()
+    return detect_hotpath.rows(smoke=smoke)
+
+
+@section("fa_hotpath")
+def _fa_hotpath(smoke=False):
+    from benchmarks import fa_hotpath
+    return fa_hotpath.rows(smoke=smoke)
 
 
 @section("roofline")
-def _roofline():
+def _roofline(smoke=False):
     from benchmarks import roofline
-    roofline.main()
+    roofline.main(smoke=smoke)
     return [("roofline", "table", "printed above", "see EXPERIMENTS.md")]
 
 
@@ -77,13 +90,15 @@ def main():
     ap.add_argument("--only", default="all")
     ap.add_argument("--json", default=None, metavar="OUT",
                     help="directory to write BENCH_<section>.json files")
+    ap.add_argument("--smoke", action="store_true",
+                    help="every section at toy sizes (CI liveness probe)")
     args = ap.parse_args()
     names = list(SECTIONS) if args.only == "all" else args.only.split(",")
     for name in names:
         t0 = time.time()
         print(f"\n===== {name} =====")
         try:
-            rows = SECTIONS[name]()
+            rows = SECTIONS[name](smoke=args.smoke)
             for row in rows:
                 print(",".join(str(c) for c in row))
         except Exception as e:  # noqa: BLE001 — report and continue

@@ -8,15 +8,8 @@ classifier invocations; checks the paper's two findings:
 
 from __future__ import annotations
 
-import numpy as np
-import jax.numpy as jnp
-
-from repro.camera.synthetic import face_dataset, security_video
-from repro.camera.viola_jones import (
-    detect_faces_batch,
-    make_feature_pool,
-    train_cascade,
-)
+from repro.camera.synthetic import security_video
+from repro.camera.viola_jones import detect_faces_batch
 
 
 def _eval(casc, frames, truth, scale, step, adaptive):
@@ -50,17 +43,15 @@ def _eval(casc, frames, truth, scale, step, adaptive):
     return prec, rec, f1, invocations
 
 
-def rows(n_frames: int = 12):
+def rows(n_frames: int = 12, smoke: bool = False):
     out = []
+    if smoke:
+        n_frames = 4
     frames, truth = security_video(n_frames=n_frames,
                                    motion_frames=min(8, n_frames - 2), seed=1)
-    X, y, _ = face_dataset(n_per_class=400, seed=3)
-    from repro.camera.viola_jones import harvest_hard_negatives
-    neg = harvest_hard_negatives(frames, truth)
-    X = np.concatenate([X, neg])
-    y = np.concatenate([y, np.zeros(len(neg), np.int32)])
-    pool = make_feature_pool(n=250)
-    casc = train_cascade(X, y, pool, n_stages=10, per_stage=33, seed=0)
+    from benchmarks.workloads import SMOKE_SCAN, fa_cascade
+    casc = (fa_cascade(smoke=True) if smoke
+            else fa_cascade(frames=frames, truth=truth))
     out.append(("cascade", "structure",
                 f"{casc.n_stages} stages x {casc.stage_sizes[0]}",
                 "Table I: 10x33"))
@@ -76,6 +67,9 @@ def rows(n_frames: int = 12):
         ("scale1.5_adaptive5%", 1.5, 0.05, True),
         ("scale2.0_step16", 2.0, 16, False),
     ]
+    if smoke:                       # two coarse points keep the sweep alive
+        settings = [("smoke_scan", *SMOKE_SCAN),
+                    ("scale2.0_step16", 2.0, 16, False)]
     base = None
     for name, scale, step, adaptive in settings:
         p, r, f1, inv = _eval(casc, frames, truth, scale, step, adaptive)
@@ -84,6 +78,8 @@ def rows(n_frames: int = 12):
         out.append(("fig4c", name,
                     f"P={p:.2f} R={r/max(base[1],1e-9):.2f}(norm) F1={f1:.2f}",
                     f"invocations={inv} ({100*(1-inv/base[3]):.0f}% fewer)"))
+    if smoke:
+        return out
     # the paper's chosen point
     p, r, f1, inv = _eval(casc, frames, truth, 1.25, 0.025, True)
     out.append(("fig4c", "paper_pick_check",

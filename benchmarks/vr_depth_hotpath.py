@@ -28,12 +28,12 @@ from __future__ import annotations
 
 import functools
 import json
-import os
-import subprocess
 import sys
 import time
 
 import numpy as np
+
+from benchmarks.timing import run_json_child, timed as _timed
 
 WORK_H, WORK_W = 270, 480          # 1/8-linear-scale 4K per camera
 N_PAIRS = 8                        # the 16-camera rig
@@ -51,21 +51,6 @@ def _rig(h=WORK_H, w=WORK_W, n_pairs=N_PAIRS):
     lefts = jnp.stack([jnp.asarray(p[0]) for p in pairs])
     rights = jnp.stack([jnp.asarray(p[1]) for p in pairs])
     return lefts, rights
-
-
-def _timed(fn, *args, reps=3):
-    import jax
-
-    block = functools.partial(jax.tree_util.tree_map,
-                              lambda x: x.block_until_ready()
-                              if hasattr(x, "block_until_ready") else x)
-    out = fn(*args)
-    block(out)                                         # warm / compile
-    t0 = time.time()
-    for _ in range(reps):
-        out = fn(*args)
-    block(out)
-    return (time.time() - t0) / reps, out
 
 
 def _rig_parallel_child():
@@ -88,20 +73,10 @@ def _rig_parallel_child():
 def _rig_parallel_ms():
     """Launch the pmap measurement in a subprocess with 8 CPU devices
     (the in-process backend is already initialized single-device)."""
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-    env["PYTHONPATH"] = os.path.join(repo, "src") + (
-        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
-    out = subprocess.run(
-        [sys.executable, "-m", "benchmarks.vr_depth_hotpath", "--rig-child"],
-        capture_output=True, text=True, env=env, cwd=repo, timeout=900)
-    if out.returncode != 0:
-        return None
-    return json.loads(out.stdout.strip().splitlines()[-1])
+    return run_json_child(["benchmarks.vr_depth_hotpath", "--rig-child"])
 
 
-def rows(n_oracle_pairs: int = 2):
+def rows(n_oracle_pairs: int = 2, smoke: bool = False):
     import jax
     import jax.numpy as jnp
 
@@ -113,7 +88,12 @@ def rows(n_oracle_pairs: int = 2):
 
     out = []
     spec = GridSpec(sigma_spatial=SIGMA)
-    lefts, rights = _rig()
+    if smoke:                      # toy tile, no subprocess: CI liveness only
+        n_oracle_pairs = 1
+        lefts, rights = _rig(h=64, w=96, n_pairs=2)
+    else:
+        lefts, rights = _rig()
+    n_pairs = int(lefts.shape[0])
 
     # ---- fused: whole rig frame through the executor (single device) --------
     ex = VRRigExecutor(spec, max_disp=MAX_DISP, n_iters=N_ITERS)
@@ -121,7 +101,7 @@ def rows(n_oracle_pairs: int = 2):
     t_pano, _ = _timed(lambda: ex.panorama(lefts, rights, depths))
 
     # ---- rig-parallel: one pair per device (subprocess, 8 CPU devices) ------
-    rig = _rig_parallel_ms()
+    rig = None if smoke else _rig_parallel_ms()
 
     # ---- oracle: the seed per-pair Python loop, eager, warm -----------------
     bssa_depth_ref(lefts[0], rights[0], spec, MAX_DISP,
@@ -167,12 +147,12 @@ def rows(n_oracle_pairs: int = 2):
     oracle_blocks = dict(rough=t_or, splat=t_os, refine=t_orf, slice=t_osl)
 
     # ---- rows ---------------------------------------------------------------
-    fused_pair_ms = 1e3 * t_depth / N_PAIRS
+    fused_pair_ms = 1e3 * t_depth / n_pairs
     speedup_1dev = t_oracle_pair * 1e3 / fused_pair_ms
     out.append(("vr_depth", "working_resolution",
-                f"{WORK_W}x{WORK_H}x{N_PAIRS}pairs",
-                f"1/8-linear 4K per camera, D={MAX_DISP}, {N_ITERS} iters, "
-                f"sigma={SIGMA}"))
+                f"{lefts.shape[2]}x{lefts.shape[1]}x{n_pairs}pairs",
+                f"{'SMOKE tile' if smoke else '1/8-linear 4K per camera'}, "
+                f"D={MAX_DISP}, {N_ITERS} iters, sigma={SIGMA}"))
     out.append(("vr_depth", "oracle_ms_per_pair", f"{1e3*t_oracle_pair:.1f}",
                 f"seed eager loop, warm, {n_oracle_pairs} pairs timed"))
     out.append(("vr_depth", "fused_ms_per_pair_1dev", f"{fused_pair_ms:.1f}",

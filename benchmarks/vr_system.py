@@ -35,7 +35,7 @@ from repro.core.costmodel import (
 from repro.core.placement import solve_cut
 
 
-def rows(measured: bool = False):
+def rows(measured: bool = False, smoke: bool = False):
     out = []
     stats = VRWorkloadStats()
     pipe = vr_pipeline(stats)
@@ -120,7 +120,7 @@ def rows(measured: bool = False):
     # ---- measured fused executor (the x10 claim as wall clock) ---------------
     if measured:
         from benchmarks import vr_depth_hotpath
-        out.extend(vr_depth_hotpath.rows())
+        out.extend(vr_depth_hotpath.rows(smoke=smoke))
     return out
 
 

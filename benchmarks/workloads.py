@@ -1,0 +1,84 @@
+"""Shared §III benchmark workload constants (one definition, four users).
+
+fa_system, vj_tradeoffs, detect_hotpath and fa_hotpath all exercise the
+same detector on the same two operating points; keeping the toy-vs-full
+cascade and scan constants here means a change to the smoke workload
+cannot silently de-synchronize the sections the smoke CI probe compares.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# (scale_factor, step, adaptive)
+SMOKE_SCAN = (1.6, 8.0, False)       # coarse: seconds-fast, offline
+FULL_SCAN = (1.25, 0.025, True)      # the paper's §III-B pick
+
+
+def fa_scan(smoke: bool = False) -> tuple:
+    return SMOKE_SCAN if smoke else FULL_SCAN
+
+
+def fa_cascade(smoke: bool = False, frames=None, truth=None):
+    """Train the benchmark detector: a toy 2x6 cascade on 80/class
+    (smoke) or the full Table-I 10x33 on 400/class, with hard negatives
+    harvested from the security video when (frames, truth) are given."""
+    from repro.camera.synthetic import face_dataset
+    from repro.camera.viola_jones import (
+        harvest_hard_negatives, make_feature_pool, train_cascade)
+
+    if smoke:
+        X, y, _ = face_dataset(n_per_class=80, seed=3)
+        return train_cascade(X, y, make_feature_pool(n=60), n_stages=2,
+                             per_stage=6, seed=0)
+    X, y, _ = face_dataset(n_per_class=400, seed=3)
+    if frames is not None:
+        neg = harvest_hard_negatives(frames, truth)
+        X = np.concatenate([X, neg])
+        y = np.concatenate([y, np.zeros(len(neg), np.int32)])
+    return train_cascade(X, y, make_feature_pool(n=250), n_stages=10,
+                         per_stage=33, seed=0)
+
+
+def host_loop_funnel(ex, frames, nn_fn, prepared=None):
+    """The per-motion-frame host-loop funnel — the golden oracle the
+    streaming executor is pinned against (benchmarks/fa_hotpath.py parity
+    rows AND tests/test_camera_pipeline.py assert against this one
+    implementation): motion mask on host, ``ex.det.detect`` over the
+    motion frames, numpy ``extract_windows`` crops, ``nn_fn`` on the
+    flattened crops, threshold count.
+
+    Returns ``(mask, n_win, n_auth, scores, prepared)`` with per-frame
+    int64 count arrays and ``scores[i]`` the per-window array for motion
+    frame ``i``.  Pass the returned ``prepared`` (the detection + crop
+    pass) back in to re-apply a different NN to identical crops.
+    """
+    from repro.camera.motion import motion_mask
+    from repro.camera.viola_jones import extract_windows
+    import jax.numpy as jnp
+
+    mask, _ = motion_mask(jnp.asarray(frames), ex.motion_threshold,
+                          ex.motion_factor)
+    mask = np.asarray(mask)
+    midx = np.where(mask)[0]
+    if prepared is None:
+        dets_all, _stats = ex.det.detect(frames[midx])
+        crops = {}
+        for i, dets in zip(midx, dets_all):
+            if dets:
+                wins = extract_windows(frames[i], dets)
+                crops[i] = (len(dets), wins.reshape(len(wins), -1))
+            else:
+                crops[i] = (0, None)
+        prepared = crops
+    n_win = np.zeros(len(frames), np.int64)
+    n_auth = np.zeros(len(frames), np.int64)
+    scores = {}
+    for i, (n, flat) in prepared.items():
+        n_win[i] = n
+        if not n:
+            continue
+        s = np.asarray(nn_fn(flat))
+        scores[i] = s
+        n_auth[i] = int((s > ex.auth_threshold).sum())
+    return mask, n_win, n_auth, scores, prepared

@@ -2,10 +2,14 @@
 
   capture -> motion detection -> Viola-Jones -> 400-8-1 NN (int8 + LUT)
 
-Trains the face NN, fits the VJ cascade, runs the full filter chain over a
-security-style video, and evaluates every offload configuration with the
-calibrated cost model — printing the Fig. 8 ladder and the Fig. 9 +28%
-result as measured on THIS run's funnel.
+Trains the face NN, fits the VJ cascade, then runs the funnel through the
+SHIPPED hot path — ``FaceAuthExecutor``, the single-dispatch streaming
+executor (motion gate, fused detection, capacity-padded window gathers,
+int8-kernel NN tail) — and cross-checks its funnel counts against the
+per-motion-frame host loop (the golden oracle: ``FusedDetector.detect``
++ numpy ``extract_windows`` + ``forward_quantized``).  Finally evaluates
+every offload configuration with the calibrated cost model — printing the
+Fig. 8 ladder and the Fig. 9 +28% result as measured on THIS run's funnel.
 
     PYTHONPATH=src python examples/camera_face_auth.py
 """
@@ -17,11 +21,11 @@ from repro.camera.face_nn import (
     classification_error, forward_quantized, make_sigmoid_lut, train_face_nn)
 from repro.camera.motion import motion_mask
 from repro.camera.pipelines import (
-    FAWorkloadStats, calibrate_fa, fa_pipeline, fa_profiles)
+    FAWorkloadStats, FaceAuthExecutor, calibrate_fa, fa_pipeline, fa_profiles)
 from repro.camera.synthetic import face_dataset, security_video
 from repro.camera.viola_jones import (
-    FusedDetector, extract_windows, make_feature_pool, train_cascade)
-from repro.core.costmodel import energy_cost, IMAGE_SENSOR, MOTION_ASIC, VJ_ASIC
+    extract_windows, make_feature_pool, train_cascade)
+from repro.core.costmodel import energy_cost
 from repro.core.placement import solve_cut
 
 
@@ -39,21 +43,37 @@ def main():
     casc = train_cascade(X[:ntr], y[:ntr], pool, n_stages=10, per_stage=33)
     print(f"[vj] cascade: {casc.n_stages} stages x {casc.stage_sizes[0]} features")
 
-    # 2. run the funnel over the synthetic security video — VJ through the
-    # frame-resident fused front-end (one integral image per frame, gathered
-    # Haar features, compacting cascade with capacities calibrated on the
-    # first motion frames)
+    # 2. the shipped hot path: the whole funnel in ONE device dispatch per
+    # batch (motion gate -> frame compaction -> fused VJ -> capacity-padded
+    # window gathers -> int8-kernel NN), capacities calibrated from the
+    # workload itself
     frames, truth = security_video()
+    ex = FaceAuthExecutor(casc, nn, frames.shape[1], frames.shape[2],
+                          lut=lut, lut_meta=lmeta)
+    fcap, wcap, vj_caps = ex.calibrate(frames)
+    print(f"[exec] calibrated capacities: frames={fcap} windows={wcap} "
+          f"vj={vj_caps}")
+    res = ex(frames)
+    ex_motion = int(np.asarray(res.motion).sum())
+    ex_windows = int(np.asarray(res.n_windows).sum())
+    ex_auth = int(np.asarray(res.n_auth).sum())
+    if res.total_dropped():
+        print(f"[exec] WARNING: {res.total_dropped()} frames/windows "
+              "dropped at capacity — funnel counts are a lower bound")
+    print(f"[funnel] {len(frames)} frames -> {ex_motion} motion "
+          f"-> {ex_windows} windows -> {ex_auth} authentications "
+          "(streaming executor)")
+
+    # 3. cross-check: the per-motion-frame host loop (golden oracle) must
+    # reproduce the executor's funnel exactly (the NN scores differ only by
+    # quantization scheme: static int8 scales vs per-tensor fake-quant)
     mask, _ = motion_mask(jnp.asarray(frames), threshold=0.004)
     mask = np.asarray(mask)
     midx = np.where(mask)[0]
     windows_fired = 0
     auth_hits = 0
     if len(midx):
-        det = FusedDetector(casc, frames.shape[1], frames.shape[2])
-        caps = det.calibrate(frames[midx[:4]])
-        print(f"[vj] compacting capacities (calibrated): {caps}")
-        all_dets, dstats = det.detect(frames[midx])
+        all_dets, dstats = ex.det.detect(frames[midx])
         if dstats["dropped"]:
             print(f"[vj] WARNING: {dstats['dropped']} windows dropped at "
                   "capacity — funnel counts are a lower bound")
@@ -65,13 +85,15 @@ def main():
                 nn, jnp.asarray(wins.reshape(len(wins), -1)), 8, lut, lmeta)
             windows_fired += len(dets)
             auth_hits += int((np.asarray(scores) > 0.5).sum())
-    print(f"[funnel] {len(frames)} frames -> {int(mask.sum())} motion "
-          f"-> {windows_fired} windows -> {auth_hits} authentications")
+    agree = (int(mask.sum()) == ex_motion) and (windows_fired == ex_windows)
+    print(f"[check] host loop: {int(mask.sum())} motion -> {windows_fired} "
+          f"windows -> {auth_hits} auth (fake-quant NN) | counts "
+          f"{'MATCH' if agree else 'MISMATCH'} vs executor")
 
-    # 3. cost every configuration with the calibrated model
+    # 4. cost every configuration with the calibrated model
     stats = FAWorkloadStats(
-        n_frames=len(frames), motion_frames=int(mask.sum()),
-        windows_to_nn=max(windows_fired, 1))
+        n_frames=len(frames), motion_frames=ex_motion,
+        windows_to_nn=max(ex_windows, 1))
     cal = calibrate_fa(stats)
     pipe = fa_pipeline(stats)
     profiles = fa_profiles()

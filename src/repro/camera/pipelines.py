@@ -147,7 +147,11 @@ def calibrate_fa(stats: FAWorkloadStats,
     """
     C = sensor_w + motion_w + vj_eff_w
     B = stats.nn_windows_per_second * WINDOW_PIXELS      # bytes/s after VJ
-    B_nn = 1.0 / 8.0 / stats.n_frames * stats.n_frames   # ~0.125 B/s
+    # Post-NN uplink traffic: one 1-bit authentication decision per source
+    # frame at the 1 FPS source rate = 1/8 byte/s.  This tiny residual is
+    # what keeps the crossover equation (2) exactly solvable rather than
+    # assuming B_nn = 0; it feeds the e_c denominator below.
+    B_nn = 1.0 / 8.0
     ec_B = C * plus_pct / (crossover - 1.0 - plus_pct)
     e_c = ec_B / (B - B_nn * crossover / (crossover - 1.0 - plus_pct))
     p_nn = crossover * e_c * (B - B_nn)
@@ -288,3 +292,285 @@ class VRRigExecutor:
         depths = self.depth_maps(lefts, rights)
         left_pano, right_pano = self.panorama(lefts, rights, depths)
         return left_pano, right_pano, depths
+
+
+# ---------------------------------------------------------------------------
+# §III frame-to-auth streaming executor (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class FAExecResult:
+    """One stream's funnel output, every array in source-frame order.
+
+    Leading axis B = frames in the batch (add a leading S axis for
+    :meth:`FaceAuthExecutor.run_streams`).  ``window_id`` indexes the
+    detector's ``grid.positions``; slots beyond a frame's detections carry
+    ``window_id == -1`` / ``window_valid == False`` / ``scores == 0``.
+    """
+
+    motion: object            # (B,) bool — passed motion detection
+    n_windows: object         # (B,) int32 exact detection count (pre-capacity)
+    n_auth: object            # (B,) int32 authenticated windows
+    scores: object            # (B, W) f32 NN scores
+    window_id: object         # (B, W) int32 grid position id, -1 = padding
+    window_valid: object      # (B, W) bool
+    auth: object              # (B, W) bool score > threshold
+    windows_dropped: object   # (B,) int32 detections beyond window capacity
+    motion_dropped: object    # () int32 motion frames beyond frame capacity
+    cascade_dropped: object   # (B,) int32 detector-internal capacity drops
+
+    def total_dropped(self) -> int:
+        """Sum of every drop counter — 0 means the funnel was lossless."""
+        import numpy as np
+        return int(np.asarray(self.motion_dropped).sum()
+                   + np.asarray(self.windows_dropped).sum()
+                   + np.asarray(self.cascade_dropped).sum())
+
+
+class FaceAuthExecutor:
+    """Fused §III hot path: the whole motion -> Viola-Jones -> 400-8-1 NN
+    funnel as ONE jit region per frame batch — the software shape of the
+    paper's sensor-resident ASIC chain, with no host round-trips between
+    stages.
+
+    Stages inside the single dispatch (DESIGN.md §9):
+
+    1. **Motion gating** — frame-difference scores in-graph; motion-passing
+       frames are *compacted* to a statically-bounded prefix
+       (``frame_capacity``), the §2 capacity trick applied at frame
+       granularity, so downstream work scales with the motion rate while
+       shapes stay static.
+    2. **Fused detection** — ``FusedDetector``'s traceable core (one frame
+       integral image, gathered Haar corner taps, compacting cascade).
+    3. **Capacity-padded window gather** — per frame, up to
+       ``window_capacity`` detected windows are gathered and
+       nearest-resampled to 20x20 *on device* (integer-exact replica of
+       ``viola_jones.extract_windows``); detections beyond capacity are
+       dropped and counted, like MoE token dropping.
+    4. **Int8 NN tail** — both layers through the quant_matmul kernel with
+       static calibrated scales and the LUT sigmoid in-kernel
+       (``kernels.quant_matmul.ops.nn_forward_quantized``).
+
+    Multi-stream scaling: ``run_streams`` vmaps the funnel over N
+    independent camera feeds on one device and pmaps one stream per device
+    when available — the WISPCam-fleet analogue of ``VRRigExecutor``'s rig
+    parallelism.  The per-motion-frame host loop
+    (``examples/camera_face_auth.py``'s cross-check, with
+    ``extract_windows`` + ``forward_quantized``) is the golden oracle for
+    funnel-count and score parity.
+    """
+
+    def __init__(self, cascade, nn, h: int, w: int, *, lut=None,
+                 lut_meta=None, scale_factor: float = 1.25,
+                 step: float = 0.025, adaptive: bool = True,
+                 strictness: float = 0.0, capacities=None,
+                 motion_threshold: float = 0.004, motion_factor: int = 8,
+                 frame_capacity: int | None = None,
+                 window_capacity: int = 64, bits: int = 8,
+                 auth_threshold: float = 0.5, use_pallas: bool | None = None,
+                 interpret: bool = False, stream_parallel: bool | None = None):
+        import jax
+
+        from repro.camera.face_nn import make_sigmoid_lut
+        from repro.camera.viola_jones import FusedDetector
+        from repro.kernels.quant_matmul.ops import quantize_nn
+
+        if lut is None:
+            lut, lut_meta = make_sigmoid_lut()
+        elif lut_meta is None:
+            raise ValueError("pass lut_meta alongside an explicit lut")
+        self.lut = lut
+        self.lut_meta = lut_meta
+        self.det = FusedDetector(
+            cascade, h, w, scale_factor=scale_factor, step=step,
+            adaptive=adaptive, strictness=strictness, capacities=capacities,
+            use_pallas=use_pallas, interpret=interpret)
+        pos = np.asarray(self.det.grid.positions, np.int32)   # (n, 3)
+        self._pos_y, self._pos_x, self._pos_win = pos[:, 0], pos[:, 1], pos[:, 2]
+        self.nn = nn
+        self.qnn = quantize_nn(nn, bits=bits)
+        self.motion_threshold = float(motion_threshold)
+        self.motion_factor = int(motion_factor)
+        self.frame_capacity = frame_capacity
+        self.window_capacity = int(window_capacity)
+        self.auth_threshold = float(auth_threshold)
+        self.use_pallas = use_pallas
+        self.interpret = bool(interpret)
+        if stream_parallel is None:
+            stream_parallel = jax.local_device_count() > 1
+        self.stream_parallel = bool(stream_parallel)
+        self._rebuild()
+
+    # -- jitted funnel -------------------------------------------------------
+
+    def _rebuild(self):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.camera.motion import motion_score
+        from repro.camera.viola_jones import BASE
+        from repro.kernels.quant_matmul.ops import nn_forward_quantized
+
+        det_fn = self.det.traceable_apply
+        det_consts = self.det.apply_consts
+        n_det = len(det_consts)
+        consts = det_consts + tuple(jnp.asarray(a) for a in (
+            self._pos_y, self._pos_x, self._pos_win)) + (
+            self.qnn.w1_q, self.qnn.b1, self.qnn.w2_q, self.qnn.b2,
+            jnp.asarray(self.lut))
+        qnn, meta = self.qnn, self.lut_meta
+        W = int(self.window_capacity)
+        fcap = self.frame_capacity
+        thr, factor = self.motion_threshold, self.motion_factor
+        auth_thr = self.auth_threshold
+        use_pallas, interpret = self.use_pallas, self.interpret
+
+        def funnel(frames, *c):
+            det_c = c[:n_det]
+            pos_y, pos_x, pos_win, w1_q, b1, w2_q, b2, lut = c[n_det:]
+            frames = frames.astype(jnp.float32)
+            B = frames.shape[0]
+            M = B if fcap is None else max(1, min(int(fcap), B))
+            # -- 1. motion gating + frame compaction to capacity M ----------
+            msc = motion_score(frames[:-1], frames[1:], factor)
+            motion = jnp.concatenate(
+                [jnp.zeros((1,), bool), msc > thr])
+            order = jnp.argsort(jnp.where(motion, 0, 1), stable=True)
+            fidx = order[:M]
+            fvalid = jnp.take(motion, fidx)
+            motion_dropped = jnp.maximum(
+                jnp.sum(motion).astype(jnp.int32) - M, 0)
+            mframes = jnp.take(frames, fidx, axis=0)
+            # -- 2. fused VJ front-end (masked by the motion gate) ----------
+            # the detector's compacting cascade has its own capacities;
+            # its internal drops on motion-valid frames must surface too
+            # (the §9 contract: dropped and counted, never silent)
+            dmask, _surv, ddrop = det_fn(mframes, *det_c)
+            dmask = dmask & fvalid[:, None]
+            casc_drop_m = jnp.where(fvalid,
+                                    jnp.sum(ddrop, axis=1), 0).astype(jnp.int32)
+            n_win_m = jnp.sum(dmask, axis=1).astype(jnp.int32)
+            # -- 3. capacity-padded window gather + 20x20 resample ----------
+            # O(n) stable compaction (a full argsort over 25k window slots
+            # per frame would dominate the funnel): rank survivors by
+            # prefix count, scatter their indices into W slots, dump
+            # overflow + dead windows into a discard slot.
+            col = jnp.arange(dmask.shape[1], dtype=jnp.int32)
+            rank = jnp.cumsum(dmask.astype(jnp.int32), axis=1) - 1
+            slot = jnp.where(dmask & (rank < W), rank, W)
+            wsel = jnp.zeros((M, W + 1), jnp.int32).at[
+                jnp.arange(M)[:, None], slot].set(col[None, :])[:, :W]
+            wvalid = (jnp.arange(W, dtype=jnp.int32)[None, :]
+                      < jnp.minimum(n_win_m, W)[:, None])
+            win_dropped_m = jnp.maximum(n_win_m - W, 0)
+            wy = jnp.take(pos_y, wsel)
+            wx = jnp.take(pos_x, wsel)
+            ww = jnp.take(pos_win, wsel)                       # (M, W)
+            t = jnp.arange(BASE, dtype=jnp.int32)
+            # integer-exact replica of extract_windows' nearest resample:
+            # (arange(20) * win // 20).clip(0, win - 1)
+            off = jnp.minimum(t[None, None, :] * ww[:, :, None] // BASE,
+                              ww[:, :, None] - 1)              # (M, W, 20)
+            rows = wy[:, :, None] + off
+            cols = wx[:, :, None] + off
+            patches = jax.vmap(
+                lambda fr, r, co: fr[r[:, :, None], co[:, None, :]])(
+                    mframes, rows, cols)                       # (M, W, 20, 20)
+            # -- 4. int8 NN tail (both layers on the quant kernel) ----------
+            x = patches.reshape(M * W, BASE * BASE)
+            q = dataclasses.replace(qnn, w1_q=w1_q, b1=b1, w2_q=w2_q, b2=b2)
+            s = nn_forward_quantized(q, x, lut, meta,
+                                     use_pallas=use_pallas,
+                                     interpret=interpret).reshape(M, W)
+            s = jnp.where(wvalid, s, 0.0)
+            auth = wvalid & (s > auth_thr)
+            n_auth_m = jnp.sum(auth, axis=1).astype(jnp.int32)
+            # -- scatter back to source-frame order -------------------------
+            return dict(
+                motion=motion,
+                n_windows=jnp.zeros((B,), jnp.int32).at[fidx].set(n_win_m),
+                n_auth=jnp.zeros((B,), jnp.int32).at[fidx].set(n_auth_m),
+                scores=jnp.zeros((B, W), s.dtype).at[fidx].set(s),
+                window_id=jnp.full((B, W), -1, jnp.int32).at[fidx].set(
+                    jnp.where(wvalid, wsel.astype(jnp.int32), -1)),
+                window_valid=jnp.zeros((B, W), bool).at[fidx].set(wvalid),
+                auth=jnp.zeros((B, W), bool).at[fidx].set(auth),
+                windows_dropped=jnp.zeros((B,), jnp.int32).at[fidx].set(
+                    win_dropped_m),
+                motion_dropped=motion_dropped,
+                cascade_dropped=jnp.zeros((B,), jnp.int32).at[fidx].set(
+                    casc_drop_m),
+            )
+
+        self._consts = consts
+        self._funnel = funnel
+        self._single = jax.jit(funnel)
+        self._multi = jax.jit(jax.vmap(
+            funnel, in_axes=(0,) + (None,) * len(consts)))
+        self._pmapped = (jax.pmap(funnel,
+                                  in_axes=(0,) + (None,) * len(consts))
+                         if self.stream_parallel else None)
+
+    # -- calibration ---------------------------------------------------------
+
+    def calibrate(self, frames, margin: float = 2.0, quantum: int = 32,
+                  frame_margin: float = 1.25):
+        """Measure the workload's funnel on calibration frames and set every
+        capacity knob from it (the §2 measure-then-set procedure): cascade
+        compaction capacities (via ``FusedDetector.calibrate``), the
+        per-batch motion-frame capacity, and the per-frame window capacity.
+        Returns (frame_capacity, window_capacity, cascade_capacities).
+
+        ``frame_margin`` is deliberately tighter than the window ``margin``:
+        every spare frame slot re-pays the whole detection front-end,
+        whereas a spare window slot only pays 400 int8 MACs — and
+        motion-frame overflow degrades gracefully (dropped frames are
+        counted in ``motion_dropped``, never silently wrong).
+        """
+        import math
+
+        import jax.numpy as jnp
+
+        from repro.camera.motion import motion_mask
+
+        frames = np.asarray(frames, np.float32)
+        mask, _ = motion_mask(jnp.asarray(frames), self.motion_threshold,
+                              self.motion_factor)
+        midx = np.where(np.asarray(mask))[0]
+        max_w = 1
+        if len(midx):
+            self.det.calibrate(frames[midx[:4]])
+            dets, _stats = self.det.detect(frames[midx])
+            max_w = max((len(d) for d in dets), default=1)
+        fcap = int(math.ceil(len(midx) * frame_margin))
+        self.frame_capacity = int(min(len(frames), max(4, (fcap + 3) // 4 * 4)))
+        wcap = (int(math.ceil(max_w * margin)) // quantum + 1) * quantum
+        self.window_capacity = int(min(self.det.n_windows,
+                                       max(quantum, wcap)))
+        self._rebuild()
+        return self.frame_capacity, self.window_capacity, list(self.det.capacities)
+
+    # -- execution -----------------------------------------------------------
+
+    def __call__(self, frames) -> FAExecResult:
+        """One stream: (B, h, w) frames -> :class:`FAExecResult`."""
+        import jax.numpy as jnp
+
+        return FAExecResult(**self._single(jnp.asarray(frames),
+                                           *self._consts))
+
+    def run_streams(self, frames) -> FAExecResult:
+        """N independent feeds: (S, B, h, w) -> FAExecResult with leading S.
+
+        One stream per local device via pmap when the fleet fits
+        (``stream_parallel``); otherwise all streams vmapped on one device.
+        """
+        import jax
+        import jax.numpy as jnp
+
+        frames = jnp.asarray(frames)
+        if (self._pmapped is not None
+                and frames.shape[0] <= jax.local_device_count()):
+            return FAExecResult(**self._pmapped(frames, *self._consts))
+        return FAExecResult(**self._multi(frames, *self._consts))

@@ -595,6 +595,13 @@ class FusedDetector:
             return jax.vmap(one_frame)(ii.reshape(b, -1), ii2.reshape(b, -1))
 
         jitted = jax.jit(apply)
+        # Traceable handle for callers that fuse the detector into a LARGER
+        # jit region (camera/pipelines.FaceAuthExecutor): call
+        # ``traceable_apply(frames, *apply_consts)`` inside your own jit and
+        # pass ``apply_consts`` through as jit *arguments* (same
+        # constant-folding hazard as the NOTE above).
+        self.traceable_apply = apply
+        self.apply_consts = consts
         return lambda frames: jitted(frames, *consts)
 
     # -- capacity calibration ----------------------------------------------

@@ -21,7 +21,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _qmm_kernel(x_ref, w_ref, lut_ref, o_ref, acc_ref, *,
+def _qmm_kernel(x_ref, w_ref, lut_ref, b_ref, o_ref, acc_ref, *,
                 n_k_blocks: int, scale_x: float, scale_w: float,
                 apply_lut: bool, lut_lo: float, lut_hi: float,
                 lut_entries: int):
@@ -38,9 +38,13 @@ def _qmm_kernel(x_ref, w_ref, lut_ref, o_ref, acc_ref, *,
 
     @pl.when(ki == n_k_blocks - 1)
     def _finalize():
+        # ASIC accumulator datapath: rescale, bias add, then the LUT —
+        # the bias lives in the wide-accumulator (f32) domain, exactly
+        # where the hardware adds it before the activation lookup.
         y = acc_ref[...].astype(jnp.float32) * (scale_x * scale_w)
+        y = y + b_ref[...]                        # (1, bn) broadcast
         if apply_lut:
-            # hardware LUT: clamp to [lo, hi], index 256-entry table
+            # hardware LUT: clamp to [lo, hi], index the table
             idx = jnp.clip(
                 ((y - lut_lo) / (lut_hi - lut_lo) * (lut_entries - 1)),
                 0, lut_entries - 1).astype(jnp.int32)
@@ -49,15 +53,24 @@ def _qmm_kernel(x_ref, w_ref, lut_ref, o_ref, acc_ref, *,
 
 
 def quant_matmul_pallas(x_q, w_q, lut, *, scale_x: float, scale_w: float,
-                        apply_lut: bool = True, lut_lo: float = -8.0,
-                        lut_hi: float = 8.0, block_m: int = 128,
-                        block_n: int = 128, block_k: int = 128,
-                        interpret: bool = False):
-    """x_q: (m, k) int8, w_q: (k, n) int8, lut: (256,) f32 -> (m, n) f32."""
+                        bias=None, apply_lut: bool = True,
+                        lut_lo: float = -8.0, lut_hi: float = 8.0,
+                        block_m: int = 128, block_n: int = 128,
+                        block_k: int = 128, interpret: bool = False):
+    """x_q: (m, k) int8, w_q: (k, n) int8, lut: (entries,) f32 -> (m, n) f32.
+
+    ``bias`` (n,) f32 is added in the accumulator domain (after rescale,
+    before the LUT); ``lut_lo``/``lut_hi`` come from the same
+    ``make_sigmoid_lut`` meta the LUT was built with, so the kernel's
+    indexing can never drift from ``face_nn.sigmoid_lut``.
+    """
     m, k = x_q.shape
     n = w_q.shape[1]
     bm, bk, bn = min(block_m, m), min(block_k, k), min(block_n, n)
     assert m % bm == 0 and k % bk == 0 and n % bn == 0, (m, k, n, bm, bk, bn)
+    if bias is None:
+        bias = jnp.zeros((n,), jnp.float32)
+    bias2d = jnp.asarray(bias, jnp.float32).reshape(1, n)
 
     kernel = functools.partial(
         _qmm_kernel, n_k_blocks=k // bk, scale_x=scale_x, scale_w=scale_w,
@@ -71,9 +84,10 @@ def quant_matmul_pallas(x_q, w_q, lut, *, scale_x: float, scale_w: float,
             pl.BlockSpec((bm, bk), lambda mi, ni, ki: (mi, ki)),
             pl.BlockSpec((bk, bn), lambda mi, ni, ki: (ki, ni)),
             pl.BlockSpec(lut.shape, lambda mi, ni, ki: (0,)),
+            pl.BlockSpec((1, bn), lambda mi, ni, ki: (0, ni)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda mi, ni, ki: (mi, ni)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
         interpret=interpret,
-    )(x_q, w_q, lut)
+    )(x_q, w_q, lut, bias2d)

@@ -1,17 +1,44 @@
-"""jit'd wrapper: quantize f32 operands per-tensor and run the int8 kernel.
+"""jit'd wrappers around the int8 Pallas GEMM (paper §III-A).
 
-`nn_forward_quantized` runs the paper's whole 400-8-1 NN on the kernel —
-the ASIC's datapath end-to-end (int8 MACs + LUT sigmoid at both layers).
+Two regimes:
+
+* :func:`quant_matmul` — quantize f32 operands per call (data-dependent
+  scales, so rescale + LUT run outside the kernel);
+* :func:`quant_matmul_static` / :func:`nn_forward_quantized` — the ASIC
+  path: pre-quantized operands with *calibrated* (static) scales, bias add
+  and the 256-entry LUT sigmoid inside the kernel.  `nn_forward_quantized`
+  runs the paper's whole 400-8-1 NN on the kernel — the ASIC's datapath
+  end-to-end (int8 MACs into a wide accumulator, bias, LUT sigmoid at both
+  layers).  On CPU backends the same math dispatches to the jnp oracle
+  (ref.py), which XLA fuses well; the Pallas lowering is the TPU path and
+  what interpret-mode tests pin.
+
+LUT indexing is always driven by the ``(lo, hi, entries)`` meta returned
+by ``camera.face_nn.make_sigmoid_lut``, threaded through every entry
+point, so the kernels and ``face_nn.sigmoid_lut`` cannot drift.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 
 from repro.kernels.quant_matmul.kernel import quant_matmul_pallas
+from repro.kernels.quant_matmul.ref import quant_matmul_ref
+
+
+def _meta_or_default(lut, meta):
+    """(lo, hi, entries) — default is make_sigmoid_lut's default range."""
+    if meta is None:
+        return (-8.0, 8.0, int(lut.shape[0]))
+    lo, hi, entries = meta
+    if int(entries) != int(lut.shape[0]):
+        raise ValueError(f"lut has {lut.shape[0]} entries, meta says {entries}")
+    return (float(lo), float(hi), int(entries))
 
 
 def symmetric_quantize(x, bits: int = 8):
@@ -26,10 +53,13 @@ def _pad2(x, bm, bk):
     return jnp.pad(x, ((0, (-m) % bm), (0, (-k) % bk)))
 
 
-@functools.partial(jax.jit, static_argnames=("apply_lut", "interpret"))
-def quant_matmul(x, w, lut, *, apply_lut=True, interpret=False):
+@functools.partial(jax.jit, static_argnames=("meta", "apply_lut", "interpret"))
+def quant_matmul(x, w, lut, *, meta=None, apply_lut=True, interpret=False):
     """f32 in, int8 compute, rescale + optional LUT outside the kernel
-    (scales are data-dependent here, so they can't be kernel constants)."""
+    (scales are data-dependent here, so they can't be kernel constants).
+    ``meta`` is the ``make_sigmoid_lut`` (lo, hi, entries) triple; None
+    means the default (-8, 8) sigmoid range."""
+    lo, hi, entries = _meta_or_default(lut, meta)
     m, k = x.shape
     n = w.shape[1]
     x_q, sx = symmetric_quantize(x)
@@ -44,17 +74,19 @@ def quant_matmul(x, w, lut, *, apply_lut=True, interpret=False):
         apply_lut=False, interpret=interpret)
     y = out[:m, :n] * (sx * sw)
     if apply_lut:
-        entries = lut.shape[0]
-        idx = jnp.clip(((y + 8.0) / 16.0 * (entries - 1)), 0, entries - 1).astype(jnp.int32)
+        idx = jnp.clip(((y - lo) / (hi - lo) * (entries - 1)),
+                       0, entries - 1).astype(jnp.int32)
         y = lut[idx]
     return y
 
 
 def quant_matmul_static(x_q, w_q, lut, *, scale_x: float, scale_w: float,
-                        apply_lut=True, interpret=False):
+                        bias=None, meta=None, apply_lut=True,
+                        interpret=False):
     """ASIC path: pre-quantized operands with *calibrated* (static) scales —
-    rescale and the 256-entry LUT sigmoid run inside the kernel, exactly
+    rescale, bias add and the LUT sigmoid run inside the kernel, exactly
     like the hardware datapath."""
+    lo, hi, _entries = _meta_or_default(lut, meta)
     m, k = x_q.shape
     n = w_q.shape[1]
     bm = 8 if m <= 8 else 128
@@ -62,7 +94,99 @@ def quant_matmul_static(x_q, w_q, lut, *, scale_x: float, scale_w: float,
     bn = 128 if n >= 128 else n
     xp = _pad2(x_q, bm, bk)
     wp = _pad2(w_q, bk, bn)
+    if bias is not None:               # pad with w_q's n (sliced off below)
+        bias = jnp.pad(jnp.asarray(bias, jnp.float32),
+                       (0, wp.shape[1] - n))
     out = quant_matmul_pallas(
-        xp, wp, lut, scale_x=scale_x, scale_w=scale_w,
-        apply_lut=apply_lut, interpret=interpret)
+        xp, wp, lut, scale_x=scale_x, scale_w=scale_w, bias=bias,
+        apply_lut=apply_lut, lut_lo=lo, lut_hi=hi, interpret=interpret)
     return out[:m, :n]
+
+
+# ---------------------------------------------------------------------------
+# The 400-8-1 face-auth NN on the int8 kernel (paper §III-A datapath)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizedNN:
+    """Statically-calibrated int8 parameters of the 400-8-1 face NN.
+
+    Scales are *Python floats* fixed at calibration time (they compile into
+    the kernel as constants — the ASIC's fixed rescale shifters), weights
+    are int8 device arrays, biases stay f32 in the accumulator domain.
+    """
+
+    w1_q: jax.Array       # (n_in, n_hidden) int8
+    b1: jax.Array         # (n_hidden,) f32
+    w2_q: jax.Array       # (n_hidden, 1) int8
+    b2: jax.Array         # (1,) f32
+    scale_x: float        # input-pixel quantization step
+    scale_w1: float
+    scale_h: float        # hidden (sigmoid output in [0, 1]) step
+    scale_w2: float
+    bits: int = 8
+
+    @property
+    def qmax(self) -> int:
+        return 2 ** (self.bits - 1) - 1
+
+
+def quantize_nn(nn, *, bits: int = 8, x_max: float = 1.0) -> QuantizedNN:
+    """Offline calibration: per-tensor symmetric scales from the trained
+    weights; activation scales from the *known* ranges (input pixels in
+    [0, ``x_max``], hidden sigmoid outputs in [0, 1]) — static, like the
+    ASIC's fixed-point format, not per-batch like ``symmetric_quantize``.
+
+    ``nn`` is duck-typed: anything with ``w1``/``b1``/``w2``/``b2``
+    (``camera.face_nn.FaceNN`` in practice).
+    """
+    qmax = 2 ** (bits - 1) - 1
+    w1 = np.asarray(nn.w1, np.float32)
+    w2 = np.asarray(nn.w2, np.float32)
+    sw1 = float(max(np.abs(w1).max(), 1e-12)) / qmax
+    sw2 = float(max(np.abs(w2).max(), 1e-12)) / qmax
+    return QuantizedNN(
+        w1_q=jnp.asarray(np.clip(np.round(w1 / sw1), -qmax, qmax), jnp.int8),
+        b1=jnp.asarray(np.asarray(nn.b1, np.float32)),
+        w2_q=jnp.asarray(np.clip(np.round(w2 / sw2), -qmax, qmax), jnp.int8),
+        b2=jnp.asarray(np.asarray(nn.b2, np.float32)),
+        scale_x=float(x_max) / qmax, scale_w1=sw1,
+        scale_h=1.0 / qmax, scale_w2=sw2, bits=bits)
+
+
+def _quantize_static(x, scale: float, qmax: int):
+    return jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(jnp.int8)
+
+
+def nn_forward_quantized(qnn: QuantizedNN, x, lut, meta=None, *,
+                         use_pallas: bool | None = None,
+                         interpret: bool = False):
+    """Both NN layers through the int8 kernel: (..., n_in) f32 -> (...,) f32.
+
+    Traceable (jit/vmap/pmap-safe): all scales and the dispatch decision
+    are static.  On TPU (or with ``interpret=True`` under
+    ``use_pallas=True``) each layer is one ``quant_matmul_pallas`` call
+    with rescale + bias + LUT fused in-kernel; elsewhere the identical
+    math runs through the jnp oracle ``quant_matmul_ref``.
+    """
+    lo, hi, entries = _meta_or_default(lut, meta)
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+
+    def layer(h_q, w_q, bias, scale_in, scale_w):
+        if use_pallas:
+            return quant_matmul_static(
+                h_q, w_q, lut, scale_x=scale_in, scale_w=scale_w, bias=bias,
+                meta=(lo, hi, entries), apply_lut=True, interpret=interpret)
+        return quant_matmul_ref(
+            h_q, w_q, lut, scale_x=scale_in, scale_w=scale_w, bias=bias,
+            apply_lut=True, lut_lo=lo, lut_hi=hi)
+
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    x_q = _quantize_static(x2, qnn.scale_x, qnn.qmax)
+    h = layer(x_q, qnn.w1_q, qnn.b1, qnn.scale_x, qnn.scale_w1)
+    h_q = _quantize_static(h, qnn.scale_h, qnn.qmax)
+    y = layer(h_q, qnn.w2_q, qnn.b2, qnn.scale_h, qnn.scale_w2)
+    return y[:, 0].reshape(lead)

@@ -1,12 +1,14 @@
-"""Oracle: int32 matmul of int8 operands + rescale + LUT sigmoid."""
+"""Oracle: int32 matmul of int8 operands + rescale + bias + LUT sigmoid."""
 
 import jax.numpy as jnp
 
 
-def quant_matmul_ref(x_q, w_q, lut, *, scale_x, scale_w, apply_lut=True,
-                     lut_lo=-8.0, lut_hi=8.0):
+def quant_matmul_ref(x_q, w_q, lut, *, scale_x, scale_w, bias=None,
+                     apply_lut=True, lut_lo=-8.0, lut_hi=8.0):
     acc = jnp.einsum("mk,kn->mn", x_q.astype(jnp.int32), w_q.astype(jnp.int32))
     y = acc.astype(jnp.float32) * (scale_x * scale_w)
+    if bias is not None:
+        y = y + jnp.asarray(bias, jnp.float32)[None, :]
     if apply_lut:
         entries = lut.shape[0]
         idx = jnp.clip(((y - lut_lo) / (lut_hi - lut_lo) * (entries - 1)),

@@ -12,6 +12,11 @@ import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
+# tests share the benchmark-side oracle helpers (benchmarks/workloads.py);
+# make `import benchmarks...` work however pytest was launched
+if REPO not in sys.path:
+    sys.path.insert(0, REPO)
+
 
 def run_with_devices(code: str, n_devices: int = 8, timeout: int = 560) -> str:
     """Run a python snippet in a subprocess with N fake CPU devices."""

@@ -1,0 +1,40 @@
+"""Benchmark liveness (satellite of the §III streaming-executor PR): every
+``benchmarks/run.py`` section must RUN at toy sizes, offline, so benchmark
+bit-rot fails the suite instead of being discovered at release time.
+
+One subprocess, all sections, ``--smoke`` (seconds per section); asserts
+the orchestrator exits cleanly, every section emitted its JSON artifact,
+and the new fa_hotpath section reports executor-vs-loop funnel parity.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SECTIONS = ("fa", "vr", "vj", "nn", "bssa", "detect", "fa_hotpath",
+            "roofline")
+
+
+def test_benchmark_smoke_all_sections():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    with tempfile.TemporaryDirectory() as td:
+        out = subprocess.run(
+            [sys.executable, "-m", "benchmarks.run", "--smoke", "--json", td],
+            capture_output=True, text=True, env=env, cwd=REPO, timeout=560)
+        assert out.returncode == 0, (
+            f"benchmark smoke failed:\n{out.stdout[-4000:]}\n"
+            f"{out.stderr[-4000:]}")
+        for name in SECTIONS:
+            path = os.path.join(td, f"BENCH_{name}.json")
+            assert os.path.exists(path), f"section {name} wrote no JSON"
+            data = json.load(open(path))
+            assert data["section"] == name
+            assert data["rows"], f"section {name} emitted no rows"
+        fa = json.load(open(os.path.join(td, "BENCH_fa_hotpath.json")))
+        parity = {r[1]: r[2] for r in fa["rows"]}
+        assert parity.get("funnel_count_parity") == "identical"
+        assert float(parity.get("score_parity_int8", "1")) == 0.0

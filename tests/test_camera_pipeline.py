@@ -16,7 +16,7 @@ from repro.camera.face_nn import (
 from repro.camera.integral import integral_image, streaming_integral_rows, window_sum
 from repro.camera.motion import motion_mask
 from repro.camera.pipelines import (
-    FAWorkloadStats, calibrate_fa, fa_pipeline, fa_profiles)
+    FAWorkloadStats, FaceAuthExecutor, calibrate_fa, fa_pipeline, fa_profiles)
 from repro.camera.synthetic import face_dataset, security_video, stereo_pair
 from repro.core.costmodel import energy_cost
 
@@ -119,6 +119,123 @@ class TestCalibration:
         mv = energy_cost(pipe.configure(("motion", "vj")), profiles,
                          cal.rf_link(), "vj", duties=duties).total_w
         assert raw > mo > mv
+
+
+class TestFaceAuthExecutor:
+    """The §III streaming executor vs the per-motion-frame host loop
+    (golden oracle): identical motion/window/auth counts on the security
+    workload, scores bit-identical to the same int8 datapath run on host
+    crops, and the capacity-padding contract (DESIGN.md §9)."""
+
+    SCAN = dict(scale_factor=1.4, step=4.0, adaptive=False)
+
+    @pytest.fixture(scope="class")
+    def setup(self):
+        from repro.camera.face_nn import train_face_nn
+        from repro.camera.viola_jones import make_feature_pool, train_cascade
+        X, y, _ = face_dataset(n_per_class=250, seed=0)
+        casc = train_cascade(X, y, make_feature_pool(n=200), n_stages=6,
+                             per_stage=20, seed=0)
+        nn = train_face_nn(X, y, steps=300)
+        frames, _ = security_video(n_frames=14, motion_frames=6, seed=1)
+        ex = FaceAuthExecutor(casc, nn, frames.shape[1], frames.shape[2],
+                              **self.SCAN)
+        ex.calibrate(frames)
+        return casc, nn, frames, ex, ex(frames)
+
+    def _host_loop(self, ex, nn, frames, nn_fn):
+        """The golden-oracle funnel — the SAME implementation the benchmark
+        pins parity against (benchmarks/workloads.py), so test and
+        benchmark cannot drift onto different contracts."""
+        from benchmarks.workloads import host_loop_funnel
+        mask, n_win, n_auth, scores, _ = host_loop_funnel(
+            ex, frames, nn_fn)
+        return mask, n_win, n_auth, scores
+
+    def test_funnel_parity_vs_host_loop(self, setup):
+        from repro.kernels.quant_matmul.ops import nn_forward_quantized
+        casc, nn, frames, ex, res = setup
+        mask, n_win, n_auth, scores = self._host_loop(
+            ex, nn, frames,
+            lambda x: nn_forward_quantized(ex.qnn, jnp.asarray(x), ex.lut,
+                                           ex.lut_meta, use_pallas=False))
+        np.testing.assert_array_equal(np.asarray(res.motion), mask)
+        np.testing.assert_array_equal(np.asarray(res.n_windows), n_win)
+        np.testing.assert_array_equal(np.asarray(res.n_auth), n_auth)
+        assert res.total_dropped() == 0
+        # the in-graph gather must replicate extract_windows exactly, so
+        # scores (same int8 datapath) are identical, window-for-window
+        for i, s in scores.items():
+            v = np.asarray(res.window_valid[i])
+            np.testing.assert_array_equal(np.asarray(res.scores[i])[v], s)
+
+    def test_scores_match_fake_quant_oracle(self, setup):
+        """Against forward_quantized (the seed's float fake-quantization):
+        same scores up to the quantization-scheme gap, and identical
+        decisions for every window that is not threshold-borderline."""
+        from repro.camera.face_nn import forward_quantized
+        casc, nn, frames, ex, res = setup
+        _, _, _, scores = self._host_loop(
+            ex, nn, frames,
+            lambda x: forward_quantized(nn, jnp.asarray(x), 8, ex.lut,
+                                        ex.lut_meta))
+        checked = 0
+        for i, s_fq in scores.items():
+            v = np.asarray(res.window_valid[i])
+            s_ex = np.asarray(res.scores[i])[v]
+            assert np.abs(s_ex - s_fq).max() < 0.08
+            clear = np.abs(s_fq - ex.auth_threshold) > 0.1
+            np.testing.assert_array_equal(
+                (s_ex > ex.auth_threshold)[clear],
+                (s_fq > ex.auth_threshold)[clear])
+            checked += int(clear.sum())
+        assert checked > 0
+
+    def test_capacity_contract(self, setup):
+        """Overflow never corrupts results: excess detections/motion frames
+        are dropped and COUNTED, survivors keep original window order."""
+        casc, nn, frames, ex, res = setup
+        tight = FaceAuthExecutor(casc, nn, frames.shape[1], frames.shape[2],
+                                 window_capacity=2, frame_capacity=3,
+                                 **self.SCAN)
+        # detector-internal cascade drops must surface too (not just the
+        # executor's own two capacities)
+        starved = FaceAuthExecutor(
+            casc, nn, frames.shape[1], frames.shape[2],
+            capacities=[ex.det.n_windows] + [1] * (ex.det.n_stages - 1),
+            **self.SCAN)
+        rs = starved(frames)
+        lost = np.asarray(res.n_windows).sum() - np.asarray(rs.n_windows).sum()
+        if lost:
+            assert int(np.asarray(rs.cascade_dropped).sum()) > 0
+            assert rs.total_dropped() > 0
+        r = tight(frames)
+        n_det = np.asarray(res.n_windows)
+        n_mot = int(np.asarray(res.motion).sum())
+        assert int(np.asarray(r.motion_dropped)) == max(n_mot - 3, 0)
+        v = np.asarray(r.window_valid)
+        assert v.sum(axis=1).max() <= 2
+        # processed frames report exact pre-capacity counts and the drops
+        proc = np.asarray(r.n_windows) > 0
+        np.testing.assert_array_equal(np.asarray(r.n_windows)[proc],
+                                      n_det[proc])
+        drops = np.asarray(r.windows_dropped)
+        np.testing.assert_array_equal(
+            drops[proc], np.maximum(n_det[proc] - 2, 0))
+        for i in np.where(proc)[0]:
+            ids = np.asarray(r.window_id[i])[np.asarray(r.window_valid[i])]
+            assert list(ids) == sorted(ids)       # stable, original order
+
+    def test_multi_stream_vmap_matches_single(self, setup):
+        casc, nn, frames, ex, res = setup
+        streams = jnp.stack([jnp.asarray(frames),
+                             jnp.asarray(np.roll(frames, 3, axis=0))])
+        r = ex.run_streams(streams)
+        np.testing.assert_array_equal(np.asarray(r.n_windows[0]),
+                                      np.asarray(res.n_windows))
+        np.testing.assert_array_equal(np.asarray(r.scores[0]),
+                                      np.asarray(res.scores))
+        assert np.asarray(r.n_windows).shape[0] == 2
 
 
 class TestBSSA:

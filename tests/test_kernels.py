@@ -18,7 +18,8 @@ from repro.kernels.bilateral_blur.ref import blur_ref
 from repro.kernels.haar_frontend.kernel import haar_stage_scores_pallas
 from repro.kernels.haar_frontend.ref import haar_stage_scores_ref
 from repro.kernels.quant_matmul.ops import (
-    quant_matmul, quant_matmul_static, symmetric_quantize)
+    nn_forward_quantized, quant_matmul, quant_matmul_static, quantize_nn,
+    symmetric_quantize)
 from repro.kernels.quant_matmul.ref import quant_matmul_ref
 from repro.kernels.rwkv_scan.ops import rwkv_wkv
 from repro.kernels.rwkv_scan.ref import wkv_ref
@@ -252,6 +253,106 @@ class TestQuantMatmul:
                                 scale_w=float(sw), interpret=True)
         ref = quant_matmul_ref(xq, wq, lut, scale_x=float(sx), scale_w=float(sw))
         np.testing.assert_allclose(np.asarray(y), np.asarray(ref), atol=1e-5)
+
+    def test_bias_and_custom_lut_meta(self):
+        """Accumulator-domain bias + a non-default LUT range threaded via
+        the make_sigmoid_lut meta: kernel == ref."""
+        from repro.camera.face_nn import make_sigmoid_lut
+        lut, meta = make_sigmoid_lut(entries=128, lo=-6.0, hi=6.0)
+        x = jax.random.normal(jax.random.PRNGKey(4), (24, 96)) * 0.4
+        w = jax.random.normal(jax.random.PRNGKey(5), (96, 16)) * 0.3
+        bias = jax.random.normal(jax.random.PRNGKey(6), (16,))
+        xq, sx = symmetric_quantize(x)
+        wq, sw = symmetric_quantize(w)
+        y = quant_matmul_static(xq, wq, lut, scale_x=float(sx),
+                                scale_w=float(sw), bias=bias, meta=meta,
+                                interpret=True)
+        ref = quant_matmul_ref(xq, wq, lut, scale_x=float(sx),
+                               scale_w=float(sw), bias=bias,
+                               lut_lo=meta[0], lut_hi=meta[1])
+        np.testing.assert_allclose(np.asarray(y), np.asarray(ref), atol=1e-5)
+        # the meta must agree with face_nn.sigmoid_lut's own indexing
+        from repro.camera.face_nn import sigmoid_lut
+        z = quant_matmul_ref(xq, wq, lut, scale_x=float(sx),
+                             scale_w=float(sw), bias=bias, apply_lut=False)
+        np.testing.assert_allclose(np.asarray(y),
+                                   np.asarray(sigmoid_lut(z, lut, meta)),
+                                   atol=1e-6)
+
+    def test_bias_with_padded_n(self):
+        """n not a multiple of the block: the bias must be padded with w_q
+        (regression: unpadded bias crashed the kernel's (1, n) reshape)."""
+        from repro.camera.face_nn import make_sigmoid_lut
+        lut, _ = make_sigmoid_lut()
+        x = jax.random.normal(jax.random.PRNGKey(9), (16, 64)) * 0.4
+        w = jax.random.normal(jax.random.PRNGKey(10), (64, 200)) * 0.3
+        bias = jax.random.normal(jax.random.PRNGKey(11), (200,))
+        xq, sx = symmetric_quantize(x)
+        wq, sw = symmetric_quantize(w)
+        y = quant_matmul_static(xq, wq, lut, scale_x=float(sx),
+                                scale_w=float(sw), bias=bias, interpret=True)
+        ref = quant_matmul_ref(xq, wq, lut, scale_x=float(sx),
+                               scale_w=float(sw), bias=bias)
+        assert y.shape == (16, 200)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(ref), atol=1e-5)
+
+    def test_meta_mismatch_rejected(self):
+        from repro.camera.face_nn import make_sigmoid_lut
+        lut, _ = make_sigmoid_lut(entries=256)
+        with pytest.raises(ValueError):
+            quant_matmul_static(
+                jnp.zeros((8, 16), jnp.int8), jnp.zeros((16, 8), jnp.int8),
+                lut, scale_x=1.0, scale_w=1.0, meta=(-8.0, 8.0, 128),
+                interpret=True)
+
+
+class TestNNForwardQuantized:
+    """The paper's whole 400-8-1 NN on the int8 kernel (the tail of
+    FaceAuthExecutor's single dispatch) vs the face_nn oracles."""
+
+    def _setup(self, seed=0):
+        from repro.camera.face_nn import init_face_nn, make_sigmoid_lut
+        nn = init_face_nn(jax.random.PRNGKey(seed))
+        lut, meta = make_sigmoid_lut()
+        return nn, quantize_nn(nn), lut, meta
+
+    @pytest.mark.parametrize("m", [8, 37, 130, 256])
+    def test_pallas_matches_jnp_ref(self, m):
+        """Kernel path (interpret) == ref.py path bit-for-bit, including
+        batch sizes that are not a multiple of the block size."""
+        nn, qnn, lut, meta = self._setup()
+        x = jax.random.uniform(jax.random.PRNGKey(m), (m, 400))
+        a = nn_forward_quantized(qnn, x, lut, meta, use_pallas=True,
+                                 interpret=True)
+        b = nn_forward_quantized(qnn, x, lut, meta, use_pallas=False)
+        assert a.shape == (m,)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_matches_fake_quant_and_lut_oracles(self):
+        """Static-scale int8 vs forward_quantized (per-tensor fake-quant)
+        and forward_lut (float weights): same scores up to the
+        quantization-scheme gap, well below the decision scale."""
+        from repro.camera.face_nn import forward_lut, forward_quantized
+        nn, qnn, lut, meta = self._setup(1)
+        x = jax.random.uniform(jax.random.PRNGKey(7), (200, 400))
+        y = nn_forward_quantized(qnn, x, lut, meta, use_pallas=True,
+                                 interpret=True)
+        y_fq = forward_quantized(nn, x, 8, lut, meta)
+        y_lut = forward_lut(nn, x, lut, meta)
+        assert float(jnp.abs(y - y_fq).max()) < 0.06
+        assert float(jnp.abs(y - y_lut).max()) < 0.08
+
+    def test_traceable_inside_jit_and_vmap(self):
+        nn, qnn, lut, meta = self._setup(2)
+        x = jax.random.uniform(jax.random.PRNGKey(8), (3, 16, 400))
+        f = jax.jit(jax.vmap(
+            lambda xs: nn_forward_quantized(qnn, xs, lut, meta,
+                                            use_pallas=False)))
+        out = f(x)
+        ref = nn_forward_quantized(qnn, x.reshape(-1, 400), lut, meta,
+                                   use_pallas=False)
+        np.testing.assert_array_equal(np.asarray(out).reshape(-1),
+                                      np.asarray(ref))
 
 
 class TestRwkvScan:
