@@ -163,17 +163,18 @@ def rows(smoke: bool = False, n_oracle_frames: int = 2):
     fq_fn = lambda x: forward_quantized(nn, jnp.asarray(x), 8, lut, meta)
     int8_fn = lambda x: nn_forward_quantized(ex.qnn, jnp.asarray(x), lut,
                                              meta, use_pallas=False)
-    host_loop_funnel(ex, frames, fq_fn)            # warm (compile det batch)
-    t_host, _ = _timed(lambda: host_loop_funnel(ex, frames, fq_fn), reps=2)
+    # _timed performs its own untimed warm call (compile det batch)
+    t_host, host_out = _timed(lambda: host_loop_funnel(ex, frames, fq_fn),
+                              reps=2)
     host_ms = 1e3 * t_host / len(frames)
 
     # parity uses the SAME int8 datapath on the host loop (fake-quant scores
-    # differ from int8 at the 1e-2 level; reported separately below); one
-    # shared detection/crop pass feeds both NNs
-    mask, n_win_l, n_auth_l, s_int8, prep = host_loop_funnel(
-        ex, frames, int8_fn)
+    # differ from int8 at the 1e-2 level; reported separately below); the
+    # timed run's detection/crop pass feeds both NNs
+    s_fq = host_out[3]
+    mask, n_win_l, n_auth_l, s_int8, _prep = host_loop_funnel(
+        ex, frames, int8_fn, prepared=host_out[4])
     midx = np.where(mask)[0]
-    _, _, _, s_fq, _ = host_loop_funnel(ex, frames, fq_fn, prepared=prep)
 
     # ---- oracle: the seed per-motion-frame Python funnel --------------------
     pos = scan_positions(h, w, scan["scale_factor"], scan["step"],
@@ -205,14 +206,22 @@ def rows(smoke: bool = False, n_oracle_frames: int = 2):
     r_nauth = np.asarray(res.n_auth)
     score_diff = 0.0
     fq_diff = 0.0
+    score_mismatch = False
     for i in s_int8:
         v = np.asarray(res.window_valid[i])
         se = np.sort(np.asarray(res.scores[i])[v])
-        score_diff = max(score_diff,
-                         float(np.abs(se - np.sort(s_int8[i])).max()))
-        fq_diff = max(fq_diff,
-                      float(np.abs(np.sort(s_fq[i]) - np.sort(s_int8[i])).max()))
-    parity = (np.array_equal(r_motion, mask)
+        if se.shape != s_int8[i].shape:
+            # capacity drops shrank one side; the MISMATCH row below must
+            # still print instead of crashing on a broadcast error
+            score_mismatch = True
+            continue
+        if se.size:
+            score_diff = max(score_diff,
+                             float(np.abs(se - np.sort(s_int8[i])).max()))
+            fq_diff = max(fq_diff, float(
+                np.abs(np.sort(s_fq[i]) - np.sort(s_int8[i])).max()))
+    parity = (not score_mismatch
+              and np.array_equal(r_motion, mask)
               and np.array_equal(r_nwin, n_win_l)
               and np.array_equal(r_nauth, n_auth_l))
 

@@ -3,7 +3,7 @@ assignment's roofline report.  Prints ``table,name,value,note`` CSV rows
 and wall time per section.
 
     PYTHONPATH=src python -m benchmarks.run \
-        [--only fa,vr,vj,nn,bssa,roofline,detect,fa_hotpath] \
+        [--only fa,vr,vj,nn,bssa,roofline,detect,fa_hotpath,offload] \
         [--json OUT_DIR] [--smoke]
 
 ``--json OUT_DIR`` additionally writes each section's rows plus wall time
@@ -76,6 +76,15 @@ def _detect(smoke=False):
 def _fa_hotpath(smoke=False):
     from benchmarks import fa_hotpath
     return fa_hotpath.rows(smoke=smoke)
+
+
+@section("offload")
+def _offload(smoke=False):
+    # cut x codec-bit-width x duty sweep over MEASURED payload bytes
+    # (BENCH_offload.json carries the 8-bit knee + early-reduction-wins
+    # acceptance and the controller-vs-measured-optimum agreement)
+    from benchmarks import offload_tradeoffs
+    return offload_tradeoffs.rows(smoke=smoke)
 
 
 @section("roofline")

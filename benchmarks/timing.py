@@ -1,43 +1,22 @@
 """Shared measurement plumbing for the hot-path benchmarks.
 
-One implementation of warm-then-average timing and of the
-"subprocess with N fake CPU host devices" launcher, used by both
-vr_depth_hotpath (rig pmap) and fa_hotpath (stream-fleet pmap) — a fix
-here (blocking semantics, env setup, error handling) reaches every
-benchmark at once.
+Warm-then-average timing lives in ``repro.core.timing`` (one
+implementation shared with the offload cut controller; re-exported here
+for the benchmark modules); this module adds the "subprocess with N fake
+CPU host devices" launcher used by both vr_depth_hotpath (rig pmap) and
+fa_hotpath (stream-fleet pmap).
 """
 
 from __future__ import annotations
 
-import dataclasses
 import json
 import os
 import subprocess
 import sys
-import time
+
+from repro.core.timing import block, timed  # noqa: F401  (re-export)
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-
-
-def block(out):
-    """Block until every device array in ``out`` is ready (pytrees and
-    result dataclasses alike)."""
-    import jax
-
-    jax.block_until_ready(vars(out) if dataclasses.is_dataclass(out)
-                          else out)
-
-
-def timed(fn, *args, reps: int = 3):
-    """(seconds_per_rep, last_output): one warm call (compile + caches),
-    then ``reps`` timed calls, blocking on device completion."""
-    out = fn(*args)
-    block(out)
-    t0 = time.time()
-    for _ in range(reps):
-        out = fn(*args)
-    block(out)
-    return (time.time() - t0) / reps, out
 
 
 def run_json_child(args, n_devices: int = 8, timeout: int = 900):

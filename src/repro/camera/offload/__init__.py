@@ -1,0 +1,44 @@
+"""Executable offload runtime (DESIGN.md §10).
+
+Splits the live §III/§IV executors at any legal cut point into a
+node-side and a cloud-side jit region with a typed, codec-compressed wire
+payload between them; replays measured payload traces through a link
+simulator; and closes the loop from measured executors back into
+``core.placement.solve_cut`` via the cut controller.
+"""
+
+from repro.camera.offload.controller import (
+    ControllerReport,
+    CutController,
+    CutMeasurement,
+)
+from repro.camera.offload.executors import (
+    FaceAuthOffloadExecutor,
+    VROffloadExecutor,
+)
+from repro.camera.offload.link import (
+    BACKSCATTER,
+    ETH_25G_LINK,
+    ETH_400G_LINK,
+    LinkProfile,
+    LinkReport,
+    link_energy_w,
+    simulate_shared_link,
+)
+from repro.camera.offload.payloads import WirePayload
+
+__all__ = [
+    "BACKSCATTER",
+    "ControllerReport",
+    "CutController",
+    "CutMeasurement",
+    "ETH_25G_LINK",
+    "ETH_400G_LINK",
+    "FaceAuthOffloadExecutor",
+    "LinkProfile",
+    "LinkReport",
+    "VROffloadExecutor",
+    "WirePayload",
+    "link_energy_w",
+    "simulate_shared_link",
+]

@@ -1,0 +1,252 @@
+"""Measurement-driven cut controller (closes the §III-D/§IV-C loop).
+
+Until now the repo had two disconnected halves: `core/placement.solve_cut`
+ranked *hand-entered* Block descriptors, and the executors ran the real
+funnel but never consulted the solver.  The controller connects them:
+
+  1. **Calibrate** — run every legal cut's split executor
+     (`camera/offload/executors`) on live data, measuring node/cloud wall
+     clock and the wire payload bytes the node half actually charges.
+  2. **Fit** — convert the measurements into `core.pipeline.Block`
+     descriptors: per-stage time deltas become flops under the node
+     profile's rate, measured per-unit wire bytes become ``bytes_out``
+     (inverted through the selectivity chain so
+     ``Pipeline.cut_payload_bytes`` reproduces the measurement exactly).
+  3. **Solve** — feed the measured pipeline to ``solve_cut`` in the
+     workload's regime and execute the chosen cut.
+  4. **Audit** — compare the analytic template's predicted ranking with
+     the measured ranking (pairwise concordance) and verify the chosen
+     cut matches the exhaustive measured optimum.
+
+The fitted pipeline marks every block CORE: the split executors always
+run the full funnel prefix on the node side, so the optional-subset axis
+of the analytic search space is not executable here — the controller
+optimizes *where to cut*, which is the axis the runtime actually has.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Mapping, Sequence
+
+from repro.camera.offload.link import LinkProfile, link_energy_w
+from repro.core.costmodel import HardwareProfile, energy_cost, throughput_cost
+from repro.core.pipeline import Block, BlockKind, Pipeline
+from repro.core.placement import CutSolution, solve_cut
+from repro.core.timing import timed as _timed
+
+
+@dataclasses.dataclass(frozen=True)
+class CutMeasurement:
+    """Live measurements for one cut point."""
+
+    cut: str
+    node_s: float                 # node-half seconds per batch (warm)
+    cloud_s: float                # cloud-half seconds per batch (warm)
+    wire_bytes: float             # measured valid-element bytes per batch
+    capacity_bytes: float         # static padded wire size per batch
+    units: int                    # source units (frames) in the batch
+
+    @property
+    def bytes_per_unit(self) -> float:
+        return self.wire_bytes / max(self.units, 1)
+
+    @property
+    def node_s_per_unit(self) -> float:
+        return self.node_s / max(self.units, 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class ControllerReport:
+    """Outcome of one calibrate -> solve -> audit pass."""
+
+    regime: str
+    measurements: tuple           # (CutMeasurement, ...) in pipeline order
+    measured_pipeline: Pipeline
+    solution: CutSolution         # solve_cut on the measured pipeline
+    chosen_cut: str
+    measured_objectives: dict     # cut -> objective (watts | -fps), measured
+    predicted_objectives: dict    # cut -> objective from the analytic template
+    measured_best_cut: str
+
+    @property
+    def agrees(self) -> bool:
+        """Does the solver's pick match the exhaustive measured optimum?"""
+        return self.chosen_cut == self.measured_best_cut
+
+    @property
+    def rank_agreement(self) -> float:
+        """Pairwise concordance of predicted vs measured cut orderings."""
+        cuts = [c for c in self.measured_objectives
+                if c in self.predicted_objectives]
+        pairs = [(a, b) for i, a in enumerate(cuts) for b in cuts[i + 1:]]
+        if not pairs:
+            return 1.0
+        ok = sum(
+            1 for a, b in pairs
+            if ((self.measured_objectives[a] - self.measured_objectives[b])
+                * (self.predicted_objectives[a]
+                   - self.predicted_objectives[b])) >= 0)
+        return ok / len(pairs)
+
+
+class CutController:
+    """Calibrates, fits, solves and executes the offload cut decision."""
+
+    def __init__(self, make_executor: Callable, cuts: Sequence[str],
+                 template: Pipeline, profiles: Mapping[str, HardwareProfile],
+                 link: LinkProfile, regime: str = "energy",
+                 unit_rate_hz: float = 1.0,
+                 duties: Mapping[str, float] | None = None,
+                 target_fps: float = 30.0,
+                 byte_scale: float = 1.0, time_scale: float = 1.0):
+        """``make_executor(cut)`` builds a split executor whose ``encode``
+        consumes the calibration inputs and whose ``decode_run`` consumes
+        the payload.  ``template`` is the analytic pipeline (its blocks
+        must include every name in ``cuts``, in order); ``profiles`` maps
+        block name -> node HardwareProfile; ``link`` is an offload
+        LinkProfile (converted to the cost model's vocabulary).
+
+        ``byte_scale`` / ``time_scale`` extrapolate toy-resolution
+        measurements to the paper's native operating point before fitting
+        (payload bytes and per-stage times are linear in pixels at every
+        §IV cut) so the fitted pipeline, the analytic template, and the
+        link all live at ONE scale.  Identity (1.0) for native-resolution
+        workloads like the 176x144 §III funnel."""
+        self.make_executor = make_executor
+        self.cuts = tuple(cuts)
+        self.template = template
+        self.profiles = dict(profiles)
+        self.link = link
+        self.link_hw = HardwareProfile(
+            name=link.name, link_bw=link.bytes_per_s,
+            joules_per_byte=link.joules_per_byte)
+        if regime not in ("energy", "throughput"):
+            raise ValueError(regime)
+        self.regime = regime
+        self.unit_rate_hz = float(unit_rate_hz)
+        self.duties = dict(duties) if duties else None
+        self.target_fps = float(target_fps)
+        self.byte_scale = float(byte_scale)
+        self.time_scale = float(time_scale)
+        self.executors: dict = {}
+        self.measurements: list = []
+
+    # -- 1. calibrate --------------------------------------------------------
+
+    def calibrate(self, *inputs, units: int | None = None,
+                  reps: int = 1) -> list:
+        """Run every cut's split executor on ``inputs``; returns the
+        measurement list (also kept on ``self``)."""
+        if units is None:
+            units = int(inputs[0].shape[0])
+        self.measurements = []
+        for cut in self.cuts:
+            ex = self.executors.get(cut) or self.make_executor(cut)
+            self.executors[cut] = ex
+            node_s, payload = _timed(lambda: ex.encode(*inputs), reps=reps)
+            cloud_s, _res = _timed(lambda: ex.decode_run(payload), reps=reps)
+            self.measurements.append(CutMeasurement(
+                cut=cut, node_s=node_s, cloud_s=cloud_s,
+                wire_bytes=payload.nbytes(),
+                capacity_bytes=payload.capacity_bytes(), units=units))
+        return self.measurements
+
+    # -- 2. fit --------------------------------------------------------------
+
+    def measured_pipeline(self) -> Pipeline:
+        """Measured Block descriptors: the loop-closing artifact.
+
+        One block per cut point.  ``bytes_out`` is inverted through the
+        template's selectivity chain so ``cut_payload_bytes`` returns the
+        measured per-unit wire bytes exactly; flops come from measured
+        node-time *deltas* under the block profile's rate (so
+        ``HardwareProfile.time_for`` reproduces the measured stage time).
+        """
+        if not self.measurements:
+            raise RuntimeError("calibrate() first")
+        blocks = []
+        frac = 1.0                       # upstream selectivity product
+        prev_node = 0.0
+        prev_bytes_in = 0.0
+        for m in self.measurements:
+            tmpl = self.template.block(m.cut)
+            sel = tmpl.selectivity
+            bytes_out = (m.bytes_per_unit * self.byte_scale
+                         / max(frac * sel, 1e-12))
+            stage_s = max(m.node_s_per_unit - prev_node,
+                          0.0) * self.time_scale
+            prof = self.profiles[m.cut]
+            if prof.flops_per_s and frac > 0:
+                flops = stage_s * prof.flops_per_s / frac
+            else:
+                flops = tmpl.flops
+            kind = (BlockKind.SOURCE if tmpl.kind is BlockKind.SOURCE
+                    else BlockKind.CORE)
+            blocks.append(Block(
+                name=m.cut, flops=flops, bytes_in=prev_bytes_in,
+                bytes_out=bytes_out, kind=kind, selectivity=sel,
+                meta=(("measured_stage_s", stage_s),
+                      ("measured_wire_bytes", m.bytes_per_unit))))
+            frac *= sel
+            prev_node = m.node_s_per_unit
+            prev_bytes_in = bytes_out
+        return Pipeline(f"{self.template.name}|measured", tuple(blocks))
+
+    # -- 3. solve + execute --------------------------------------------------
+
+    def choose(self) -> CutSolution:
+        return solve_cut(
+            self.measured_pipeline(), self.profiles, self.link_hw,
+            regime=self.regime, unit_rate_hz=self.unit_rate_hz,
+            duties=self.duties, target_fps=self.target_fps)
+
+    def execute(self, *inputs):
+        """Run the solver-chosen cut's split executor end to end."""
+        sol = self.choose()
+        ex = self.executors[sol.cut_after]
+        payload = ex.encode(*inputs)
+        return ex.decode_run(payload), payload, sol
+
+    # -- 4. audit ------------------------------------------------------------
+
+    def _objective(self, pipeline: Pipeline, cut: str) -> float:
+        """Regime objective of one cut on ``pipeline`` (watts | -fps).
+
+        One formula for both the measured and the predicted score — the
+        solver's own cost functions — so the audit compares *descriptors*
+        (measured vs hand-entered), never two different models.
+        """
+        if self.regime == "energy":
+            rep = energy_cost(pipeline, self.profiles, self.link_hw, cut,
+                              unit_rate_hz=self.unit_rate_hz,
+                              duties=self.duties)
+            return rep.total_w
+        rep = throughput_cost(pipeline, self.profiles, self.link_hw, cut)
+        return -rep.fps
+
+    def report(self) -> ControllerReport:
+        measured_pipe = self.measured_pipeline()
+        sol = self.choose()
+        measured = {m.cut: self._objective(measured_pipe, m.cut)
+                    for m in self.measurements}
+        tmpl_full = self.template.configure(self.template.optional_names)
+        predicted = {}
+        for cut in self.cuts:
+            predicted[cut] = self._objective(tmpl_full, cut)
+        best = min(measured, key=measured.get)
+        return ControllerReport(
+            regime=self.regime,
+            measurements=tuple(self.measurements),
+            measured_pipeline=measured_pipe,
+            solution=sol,
+            chosen_cut=sol.cut_after,
+            measured_objectives=measured,
+            predicted_objectives=predicted,
+            measured_best_cut=best,
+        )
+
+    def comm_watts(self, cut: str) -> float:
+        """Measured transmit power at ``cut`` (closed-form link energy)."""
+        m = {m.cut: m for m in self.measurements}[cut]
+        return link_energy_w(m.bytes_per_unit, self.unit_rate_hz, self.link)

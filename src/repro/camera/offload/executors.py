@@ -1,0 +1,389 @@
+"""Cut-point split executors: node-side + cloud-side jit halves.
+
+The paper's configuration space — *where do you cut the pipeline?* — has
+so far only been scored analytically (`core/placement.solve_cut` over
+hand-entered Block descriptors) while the live executors (PRs 2-4) always
+ran end-to-end on-node.  This module makes every legal cut executable:
+
+* :class:`FaceAuthOffloadExecutor` splits the §III funnel at any of its
+  four block boundaries.  Both halves compose the *same* traceable stage
+  closures the fused :class:`~repro.camera.pipelines.FaceAuthExecutor`
+  runs (``FunnelStages``), so the split can never drift from the on-node
+  math, and each half is ONE jit dispatch (the PR-4 single-dispatch and
+  capacity-padding contracts carry over unchanged).
+* :class:`VROffloadExecutor` splits the §IV rig pipeline (raw views /
+  depth maps / panorama) around :class:`~repro.camera.pipelines.VRRigExecutor`'s
+  traceable per-pair depth + stitch functions.
+
+The wire payload between the halves is typed (`payloads.WirePayload`) and
+optionally compressed by the Pallas wire codec (`kernels/wire_codec`) at
+16/8/4 bits; ``bits=None`` ships the raw f32 runtime representation, the
+uncompressed baseline of the knee sweep.  Measured wire bytes are charged
+in-graph for *valid* payload elements only (see payloads.py).
+
+Cut payload contracts (DESIGN.md §10):
+
+  face_auth
+    sensor  frames (B,h,w)            [codec]
+    motion  mframes (M,h,w)           [codec] + fidx/motion/drop sideband
+    vj      patches (M,W,20,20)       [codec] + wsel/counts sideband
+    nn      scores (M,W)              [codec] + auth bits + counts sideband
+  vr_video
+    capture lefts,rights (P,h,w)      [codec]
+    depth   depths (P,h,w) + views    [codec]  (stitch needs full-res views
+                                      — the runtime exposes that the §IV
+                                      mid-cut ships MORE than raw, which
+                                      the analytic linear model hides)
+    stitch  left/right panoramas      [codec]
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import numpy as np
+
+from repro.camera.offload.payloads import WirePayload
+from repro.kernels.wire_codec.ops import (
+    wire_bytes,
+    wire_bytes_dynamic,
+    wire_decode,
+    wire_encode,
+)
+
+_I32_B = 4.0          # index / count sideband bytes per valid entry
+_BOOL_B = 1.0 / 8.0   # booleans ship bit-packed
+
+
+class _Codec:
+    """Static codec configuration shared by both executor families."""
+
+    def __init__(self, bits, block, use_pallas, interpret):
+        if bits not in (None, 4, 8, 16):
+            raise ValueError(f"codec bits must be None/4/8/16, got {bits}")
+        self.bits = bits
+        self.block = int(block)
+        self.use_pallas = use_pallas
+        self.interpret = bool(interpret)
+
+    def enc(self, arrays: dict, name: str, x):
+        """Pack field ``x`` into ``arrays`` (traceable)."""
+        import jax.numpy as jnp
+
+        if self.bits is None:
+            arrays[name] = x.astype(jnp.float32)
+            return
+        packed, scales = wire_encode(
+            x, bits=self.bits, block=self.block,
+            use_pallas=self.use_pallas, interpret=self.interpret)
+        arrays[name] = packed
+        arrays[name + "_scales"] = scales
+
+    def dec(self, arrays: dict, name: str, shape):
+        """Unpack field ``name`` back to f32 of static ``shape``."""
+        if self.bits is None:
+            return arrays[name].reshape(shape)
+        return wire_decode(
+            arrays[name], arrays[name + "_scales"], tuple(shape),
+            bits=self.bits, block=self.block,
+            use_pallas=self.use_pallas, interpret=self.interpret)
+
+    def dyn_bytes(self, n_values):
+        return wire_bytes_dynamic(n_values, self.bits, block=self.block)
+
+    def static_bytes(self, n_values):
+        return wire_bytes(n_values, self.bits, block=self.block)
+
+
+# ---------------------------------------------------------------------------
+# §III face authentication
+# ---------------------------------------------------------------------------
+
+
+class FaceAuthOffloadExecutor:
+    """Split §III funnel: node-side prefix, wire payload, cloud-side suffix.
+
+    Construct *after* ``base.calibrate(...)`` — the split snapshots the
+    base executor's stage closures and capacity knobs.  ``encode`` is the
+    node's single dispatch, ``decode_run`` the cloud's; ``__call__`` runs
+    both and returns ``(FAExecResult, WirePayload)``.  With ``bits=None``
+    the end-to-end result is bit-identical to the fused executor at every
+    cut (pinned by tests/test_offload.py); with a codec the deviation is
+    the measured accuracy axis of the knee sweep.
+    """
+
+    CUTS = ("sensor", "motion", "vj", "nn")
+
+    def __init__(self, base, cut: str, *, bits: int | None = None,
+                 block: int = 256, use_pallas=None, interpret: bool = False):
+        import jax
+
+        if cut not in self.CUTS:
+            raise ValueError(f"cut {cut!r} not in {self.CUTS}")
+        self.base = base
+        self.cut = cut
+        self.codec = _Codec(bits, block, use_pallas, interpret)
+        self.bits = self.codec.bits
+        self._st = base.stages
+        self._consts = base._consts
+        self._h, self._w = base.det.grid.h, base.det.grid.w
+        self._node = jax.jit(self._node_fn)
+        # cloud jit cached per source-frame shape: the sensor cut's packed
+        # payload does not carry (B, h, w), so the decode contract rides in
+        # WirePayload.meta (same scheme as VROffloadExecutor)
+        self._cloud_cache: dict = {}
+
+    # -- node side -----------------------------------------------------------
+
+    def _node_fn(self, frames, *c):
+        import jax.numpy as jnp
+
+        st, cdc = self._st, self.codec
+        cut = self.cut
+        B = frames.shape[0]
+        h, w = self._h, self._w
+        arrays: dict = {}
+        if cut == "sensor":
+            cdc.enc(arrays, "frames", frames.astype(jnp.float32))
+            wire_b = jnp.asarray(cdc.static_bytes(B * h * w), jnp.float32)
+            return arrays, wire_b
+
+        det_c, pos_c, nn_c = st.split_consts(c)
+        mframes, fidx, fvalid, motion, motion_dropped = st.motion(frames)
+        n_valid_f = jnp.sum(fvalid).astype(jnp.float32)
+        side = _I32_B * n_valid_f + _BOOL_B * B + _I32_B   # fidx+motion+drop
+        if cut == "motion":
+            # zero the capacity-padding frames (fidx padding points at real
+            # non-motion frames): a zero quantizes to zero exactly, so
+            # padding cannot perturb the codec's block scales, matching the
+            # variable-length transmit the byte accounting models.  The
+            # cloud half masks everything by fvalid, so results are
+            # unchanged (bits=None stays bit-exact).
+            cdc.enc(arrays, "mframes",
+                    jnp.where(fvalid[:, None, None], mframes, 0.0))
+            arrays.update(fidx=fidx.astype(jnp.int32), motion=motion,
+                          motion_dropped=motion_dropped)
+            wire_b = cdc.dyn_bytes(n_valid_f * (h * w)) + side
+            return arrays, wire_b
+
+        dmask, n_win_m, casc_drop_m = st.detect(mframes, fvalid, det_c)
+        patches, wsel, wvalid, win_dropped_m = st.gather(
+            mframes, dmask, n_win_m, pos_c)
+        n_valid_w = jnp.sum(wvalid).astype(jnp.float32)
+        # per processed valid frame: n_win + win_dropped + casc_drop counts
+        side = side + _I32_B * 3 * n_valid_f
+        common = dict(wsel=wsel.astype(jnp.int32),
+                      n_win=n_win_m, win_dropped=win_dropped_m,
+                      casc_drop=casc_drop_m, fidx=fidx.astype(jnp.int32),
+                      motion=motion, motion_dropped=motion_dropped)
+        if cut == "vj":
+            # zero padding windows (wsel defaults to position 0) — same
+            # scale-isolation argument as the motion cut above
+            cdc.enc(arrays, "patches",
+                    jnp.where(wvalid[:, :, None, None], patches, 0.0))
+            arrays.update(common)
+            wire_b = (cdc.dyn_bytes(n_valid_w * patches.shape[-1]
+                                    * patches.shape[-2])
+                      + _I32_B * n_valid_w + side)
+            return arrays, wire_b
+
+        s, auth, _n_auth_m = st.nn(patches, wvalid, nn_c)
+        cdc.enc(arrays, "scores", s)
+        arrays.update(common, auth=auth)
+        wire_b = (cdc.dyn_bytes(n_valid_w) + _BOOL_B * n_valid_w
+                  + _I32_B * n_valid_w + side)
+        return arrays, wire_b
+
+    # -- cloud side ----------------------------------------------------------
+
+    def _cloud_fn(self, arrays, *c, frames_shape):
+        import jax.numpy as jnp
+
+        st, cdc = self._st, self.codec
+        cut = self.cut
+        det_c, pos_c, nn_c = st.split_consts(c)
+        h, w = self._h, self._w
+        W = st.window_capacity
+        if cut == "sensor":
+            frames = cdc.dec(arrays, "frames", frames_shape)
+            mframes, fidx, fvalid, motion, motion_dropped = st.motion(frames)
+        else:
+            fidx = arrays["fidx"]
+            motion = arrays["motion"]
+            motion_dropped = arrays["motion_dropped"]
+            fvalid = jnp.take(motion, fidx)
+        B = motion.shape[0]
+        M = fidx.shape[0]
+
+        if cut in ("sensor", "motion"):
+            if cut == "motion":
+                mframes = cdc.dec(arrays, "mframes", (M, h, w))
+            dmask, n_win_m, casc_drop_m = st.detect(mframes, fvalid, det_c)
+            patches, wsel, wvalid, win_dropped_m = st.gather(
+                mframes, dmask, n_win_m, pos_c)
+        else:
+            wsel = arrays["wsel"]
+            n_win_m = arrays["n_win"]
+            win_dropped_m = arrays["win_dropped"]
+            casc_drop_m = arrays["casc_drop"]
+            wvalid = (jnp.arange(W, dtype=jnp.int32)[None, :]
+                      < jnp.minimum(n_win_m, W)[:, None])
+
+        if cut == "nn":
+            s = jnp.where(wvalid, cdc.dec(arrays, "scores", (M, W)), 0.0)
+            auth = arrays["auth"]
+            n_auth_m = jnp.sum(auth, axis=1).astype(jnp.int32)
+        else:
+            if cut == "vj":
+                patches = cdc.dec(arrays, "patches", (M, W, 20, 20))
+            s, auth, n_auth_m = st.nn(patches, wvalid, nn_c)
+
+        return st.scatter(B, fidx, motion, motion_dropped, n_win_m,
+                          casc_drop_m, wsel, wvalid, win_dropped_m,
+                          s, auth, n_auth_m)
+
+    # -- execution -----------------------------------------------------------
+
+    def encode(self, frames) -> WirePayload:
+        """Node-side dispatch: frames -> wire payload."""
+        import jax.numpy as jnp
+
+        frames = jnp.asarray(frames)
+        arrays, wire_b = self._node(frames, *self._consts)
+        return WirePayload(cut=self.cut, bits=self.bits, arrays=arrays,
+                           meta={"frames_shape": tuple(frames.shape)},
+                           wire_b=wire_b)
+
+    def decode_run(self, payload: WirePayload):
+        """Cloud-side dispatch: wire payload -> FAExecResult."""
+        import functools
+
+        import jax
+
+        from repro.camera.pipelines import FAExecResult
+
+        key = payload.meta["frames_shape"]
+        fn = self._cloud_cache.get(key)
+        if fn is None:
+            fn = jax.jit(functools.partial(self._cloud_fn, frames_shape=key))
+            self._cloud_cache[key] = fn
+        return FAExecResult(**fn(payload.arrays, *self._consts))
+
+    def __call__(self, frames):
+        payload = self.encode(frames)
+        return self.decode_run(payload), payload
+
+
+# ---------------------------------------------------------------------------
+# §IV VR rig
+# ---------------------------------------------------------------------------
+
+
+class VROffloadExecutor:
+    """Split §IV rig pipeline around :class:`VRRigExecutor`'s stages.
+
+    ``encode(lefts, rights)`` is the rig-side dispatch, ``decode_run`` the
+    cloud side; results are ``(left_pano, right_pano)``.  Depth is vmapped
+    over camera pairs inside whichever half owns it, exactly as the fused
+    executor runs it.
+    """
+
+    CUTS = ("capture", "depth", "stitch")
+
+    def __init__(self, base, cut: str, *, bits: int | None = None,
+                 block: int = 256, use_pallas=None, interpret: bool = False):
+        import jax
+
+        if cut not in self.CUTS:
+            raise ValueError(f"cut {cut!r} not in {self.CUTS}")
+        self.base = base
+        self.cut = cut
+        self.codec = _Codec(bits, block, use_pallas, interpret)
+        self.bits = self.codec.bits
+        self._depth = jax.vmap(base.pair_depth)
+        self._pano = base.pano_fn
+        self._node = jax.jit(self._node_fn)
+        self._cloud_cache: dict = {}
+        self._pano_shape_cache: dict = {}
+
+    def _node_fn(self, lefts, rights):
+        import jax.numpy as jnp
+
+        cdc = self.codec
+        P, h, w = lefts.shape
+        arrays: dict = {}
+        if self.cut == "capture":
+            cdc.enc(arrays, "lefts", lefts.astype(jnp.float32))
+            cdc.enc(arrays, "rights", rights.astype(jnp.float32))
+            wire_b = 2 * cdc.static_bytes(P * h * w)
+        elif self.cut == "depth":
+            depths = self._depth(lefts, rights)
+            cdc.enc(arrays, "depths", depths)
+            cdc.enc(arrays, "lefts", lefts.astype(jnp.float32))
+            cdc.enc(arrays, "rights", rights.astype(jnp.float32))
+            wire_b = 3 * cdc.static_bytes(P * h * w)
+        else:                                      # stitch: full on-node
+            depths = self._depth(lefts, rights)
+            lp, rp = self._pano(lefts, rights, depths)
+            cdc.enc(arrays, "left_pano", lp)
+            cdc.enc(arrays, "right_pano", rp)
+            wire_b = (cdc.static_bytes(int(np.prod(lp.shape)))
+                      + cdc.static_bytes(int(np.prod(rp.shape))))
+        return arrays, jnp.asarray(wire_b, jnp.float32)
+
+    def _cloud_fn_for(self, meta_key):
+        import jax
+
+        view_shape, pano_shapes = meta_key
+        cdc = self.codec
+
+        def cloud(arrays):
+            if self.cut == "capture":
+                lefts = cdc.dec(arrays, "lefts", view_shape)
+                rights = cdc.dec(arrays, "rights", view_shape)
+                depths = self._depth(lefts, rights)
+                return self._pano(lefts, rights, depths)
+            if self.cut == "depth":
+                depths = cdc.dec(arrays, "depths", view_shape)
+                lefts = cdc.dec(arrays, "lefts", view_shape)
+                rights = cdc.dec(arrays, "rights", view_shape)
+                return self._pano(lefts, rights, depths)
+            return (cdc.dec(arrays, "left_pano", pano_shapes[0]),
+                    cdc.dec(arrays, "right_pano", pano_shapes[1]))
+
+        return jax.jit(cloud)
+
+    def encode(self, lefts, rights) -> WirePayload:
+        import jax
+        import jax.numpy as jnp
+
+        lefts, rights = jnp.asarray(lefts), jnp.asarray(rights)
+        arrays, wire_b = self._node(lefts, rights)
+        pano_shapes = None
+        if self.cut == "stitch":
+            key = tuple(lefts.shape)
+            if key not in self._pano_shape_cache:
+                # shape inference only — cached so the timed encode path
+                # stays dispatch-only after the first call
+                lp, rp = jax.eval_shape(
+                    lambda l, r: self._pano(l, r, self._depth(l, r)),
+                    lefts, rights)
+                self._pano_shape_cache[key] = (tuple(lp.shape),
+                                               tuple(rp.shape))
+            pano_shapes = self._pano_shape_cache[key]
+        return WirePayload(
+            cut=self.cut, bits=self.bits, arrays=arrays,
+            meta={"view_shape": tuple(lefts.shape),
+                  "pano_shapes": pano_shapes},
+            wire_b=wire_b)
+
+    def decode_run(self, payload: WirePayload):
+        key = (payload.meta["view_shape"], payload.meta["pano_shapes"])
+        if key not in self._cloud_cache:
+            self._cloud_cache[key] = self._cloud_fn_for(key)
+        return self._cloud_cache[key](payload.arrays)
+
+    def __call__(self, lefts, rights):
+        payload = self.encode(lefts, rights)
+        return self.decode_run(payload), payload

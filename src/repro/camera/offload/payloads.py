@@ -1,0 +1,65 @@
+"""Typed wire payloads for offload cut points (DESIGN.md §10).
+
+A :class:`WirePayload` is everything that crosses the offload link when a
+pipeline is cut: the codec-packed (or raw) tensors, the integer/boolean
+sideband (indices, counts, drop counters), and two byte accountings:
+
+* ``wire_bytes`` — the **measured** bytes a real variable-length transmit
+  would put on the air: only *valid* (non-capacity-padding) payload
+  elements are charged, at the codec bit-width plus one f32 scale per
+  block; index/count sideband at 4 B per valid entry; booleans at 1 bit.
+  Computed in-graph by the node-side jit region, so it is data-dependent
+  (a quiet scene after the motion cut charges almost nothing) while every
+  shape stays static.
+* ``capacity_bytes`` — the static padded size of the arrays actually held
+  in memory (the §9 capacity-padding contract's worst case).  The gap
+  between the two is exactly what compaction buys on the wire.
+
+Payload arrays stay capacity-padded device arrays; the node halves zero
+every invalid slot before encoding, so the codec packs padding as exact
+zeros (a zero quantizes to zero, and a padding slot can never inflate a
+block scale shared with valid data) and the padding is never charged.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+def static_array_bytes(a) -> float:
+    """Static wire size of one array: bools at 1 bit, else itemsize.
+
+    Reads only shape/dtype metadata — never materializes device arrays
+    on the host (this runs inside the controller's timed calibration)."""
+    import numpy as np
+
+    dtype = np.dtype(a.dtype)
+    size = int(np.prod(a.shape)) if a.shape else 1
+    if dtype == np.bool_:
+        return size / 8.0
+    return float(size * dtype.itemsize)
+
+
+@dataclasses.dataclass
+class WirePayload:
+    """One cut's wire payload (node-side jit output).
+
+    ``arrays`` holds every on-wire tensor (packed codec bytes + scales
+    under ``<field>``/``<field>_scales``, plus sideband).  ``meta`` holds
+    the static decode contract: per-codec-field original shape, the codec
+    bit-width/block, and the source batch size.
+    """
+
+    cut: str
+    bits: int | None              # codec width; None = raw f32 passthrough
+    arrays: dict
+    meta: dict
+    wire_b: object                # () f32 — measured (valid-element) bytes
+
+    def nbytes(self) -> float:
+        """Measured wire bytes for this batch (valid elements only)."""
+        return float(self.wire_b)
+
+    def capacity_bytes(self) -> float:
+        """Static padded wire size (every slot shipped, none elided)."""
+        return sum(static_array_bytes(a) for a in self.arrays.values())

@@ -269,10 +269,13 @@ class VRRigExecutor:
         pair_depth = functools.partial(
             bssa_depth, spec=spec, max_disp=max_disp, n_iters=n_iters,
             use_pallas=use_pallas, interpret=interpret)
+        # traceable handles for callers composing the rig pipeline into
+        # their own jit regions (camera/offload's split executors)
+        self.pair_depth = pair_depth
+        self.pano_fn = functools.partial(stereo_panorama, ipd_px=ipd_px)
         self._depth = jax.jit(jax.vmap(pair_depth))
         self._depth_pmap = jax.pmap(pair_depth) if rig_parallel else None
-        self._pano = jax.jit(functools.partial(stereo_panorama,
-                                               ipd_px=ipd_px))
+        self._pano = jax.jit(self.pano_fn)
 
     def depth_maps(self, lefts, rights):
         """(n_pairs, h, w) x2 -> (n_pairs, h, w) refined depth."""
@@ -326,6 +329,26 @@ class FAExecResult:
         return int(np.asarray(self.motion_dropped).sum()
                    + np.asarray(self.windows_dropped).sum()
                    + np.asarray(self.cascade_dropped).sum())
+
+
+@dataclasses.dataclass(frozen=True)
+class FunnelStages:
+    """Traceable stage closures of one configured §III funnel.
+
+    Rebuilt by :meth:`FaceAuthExecutor._rebuild`; the fused funnel and the
+    offload runtime's split executors (``repro.camera.offload``) compose
+    these same functions, so a cut can never drift from the on-node math.
+    ``split_consts`` partitions the executor's jit-argument tuple into the
+    (detector, position-table, NN) constant groups the stages consume.
+    """
+
+    motion: object            # frames -> (mframes, fidx, fvalid, motion, motion_dropped)
+    detect: object            # (mframes, fvalid, det_c) -> (dmask, n_win_m, casc_drop_m)
+    gather: object            # (mframes, dmask, n_win_m, pos_c) -> (patches, wsel, wvalid, win_dropped_m)
+    nn: object                # (patches, wvalid, nn_c) -> (s, auth, n_auth_m)
+    scatter: object           # source-frame-order result dict
+    split_consts: object      # consts tuple -> (det_c, pos_c, nn_c)
+    window_capacity: int
 
 
 class FaceAuthExecutor:
@@ -415,10 +438,11 @@ class FaceAuthExecutor:
         det_fn = self.det.traceable_apply
         det_consts = self.det.apply_consts
         n_det = len(det_consts)
-        consts = det_consts + tuple(jnp.asarray(a) for a in (
-            self._pos_y, self._pos_x, self._pos_win)) + (
-            self.qnn.w1_q, self.qnn.b1, self.qnn.w2_q, self.qnn.b2,
-            jnp.asarray(self.lut))
+        pos_consts = tuple(jnp.asarray(a) for a in (
+            self._pos_y, self._pos_x, self._pos_win))
+        nn_consts = (self.qnn.w1_q, self.qnn.b1, self.qnn.w2_q, self.qnn.b2,
+                     jnp.asarray(self.lut))
+        consts = det_consts + pos_consts + nn_consts
         qnn, meta = self.qnn, self.lut_meta
         W = int(self.window_capacity)
         fcap = self.frame_capacity
@@ -426,13 +450,17 @@ class FaceAuthExecutor:
         auth_thr = self.auth_threshold
         use_pallas, interpret = self.use_pallas, self.interpret
 
-        def funnel(frames, *c):
-            det_c = c[:n_det]
-            pos_y, pos_x, pos_win, w1_q, b1, w2_q, b2, lut = c[n_det:]
+        # The funnel is factored into traceable stage closures so the
+        # offload runtime (camera/offload) can split it at any legal cut
+        # point into a node-side and a cloud-side jit region while the
+        # fused funnel below composes the very same functions — one
+        # implementation, two placements (DESIGN.md §10).
+
+        def stage_motion(frames):
+            """-- 1. motion gating + frame compaction to capacity M ------"""
             frames = frames.astype(jnp.float32)
             B = frames.shape[0]
             M = B if fcap is None else max(1, min(int(fcap), B))
-            # -- 1. motion gating + frame compaction to capacity M ----------
             msc = motion_score(frames[:-1], frames[1:], factor)
             motion = jnp.concatenate(
                 [jnp.zeros((1,), bool), msc > thr])
@@ -442,20 +470,30 @@ class FaceAuthExecutor:
             motion_dropped = jnp.maximum(
                 jnp.sum(motion).astype(jnp.int32) - M, 0)
             mframes = jnp.take(frames, fidx, axis=0)
-            # -- 2. fused VJ front-end (masked by the motion gate) ----------
-            # the detector's compacting cascade has its own capacities;
-            # its internal drops on motion-valid frames must surface too
-            # (the §9 contract: dropped and counted, never silent)
+            return mframes, fidx, fvalid, motion, motion_dropped
+
+        def stage_detect(mframes, fvalid, det_c):
+            """-- 2. fused VJ front-end (masked by the motion gate) ------
+
+            The detector's compacting cascade has its own capacities; its
+            internal drops on motion-valid frames must surface too (the §9
+            contract: dropped and counted, never silent)."""
             dmask, _surv, ddrop = det_fn(mframes, *det_c)
             dmask = dmask & fvalid[:, None]
             casc_drop_m = jnp.where(fvalid,
                                     jnp.sum(ddrop, axis=1), 0).astype(jnp.int32)
             n_win_m = jnp.sum(dmask, axis=1).astype(jnp.int32)
-            # -- 3. capacity-padded window gather + 20x20 resample ----------
-            # O(n) stable compaction (a full argsort over 25k window slots
-            # per frame would dominate the funnel): rank survivors by
-            # prefix count, scatter their indices into W slots, dump
-            # overflow + dead windows into a discard slot.
+            return dmask, n_win_m, casc_drop_m
+
+        def stage_gather(mframes, dmask, n_win_m, pos_c):
+            """-- 3. capacity-padded window gather + 20x20 resample ------
+
+            O(n) stable compaction (a full argsort over 25k window slots
+            per frame would dominate the funnel): rank survivors by prefix
+            count, scatter their indices into W slots, dump overflow +
+            dead windows into a discard slot."""
+            pos_y, pos_x, pos_win = pos_c
+            M = mframes.shape[0]
             col = jnp.arange(dmask.shape[1], dtype=jnp.int32)
             rank = jnp.cumsum(dmask.astype(jnp.int32), axis=1) - 1
             slot = jnp.where(dmask & (rank < W), rank, W)
@@ -477,16 +515,26 @@ class FaceAuthExecutor:
             patches = jax.vmap(
                 lambda fr, r, co: fr[r[:, :, None], co[:, None, :]])(
                     mframes, rows, cols)                       # (M, W, 20, 20)
-            # -- 4. int8 NN tail (both layers on the quant kernel) ----------
-            x = patches.reshape(M * W, BASE * BASE)
+            return patches, wsel, wvalid, win_dropped_m
+
+        def stage_nn(patches, wvalid, nn_c):
+            """-- 4. int8 NN tail (both layers on the quant kernel) ------"""
+            w1_q, b1, w2_q, b2, lut = nn_c
+            M, Wc = patches.shape[:2]
+            x = patches.reshape(M * Wc, BASE * BASE)
             q = dataclasses.replace(qnn, w1_q=w1_q, b1=b1, w2_q=w2_q, b2=b2)
             s = nn_forward_quantized(q, x, lut, meta,
                                      use_pallas=use_pallas,
-                                     interpret=interpret).reshape(M, W)
+                                     interpret=interpret).reshape(M, Wc)
             s = jnp.where(wvalid, s, 0.0)
             auth = wvalid & (s > auth_thr)
             n_auth_m = jnp.sum(auth, axis=1).astype(jnp.int32)
-            # -- scatter back to source-frame order -------------------------
+            return s, auth, n_auth_m
+
+        def stage_scatter(B, fidx, motion, motion_dropped, n_win_m,
+                          casc_drop_m, wsel, wvalid, win_dropped_m,
+                          s, auth, n_auth_m):
+            """-- scatter back to source-frame order ---------------------"""
             return dict(
                 motion=motion,
                 n_windows=jnp.zeros((B,), jnp.int32).at[fidx].set(n_win_m),
@@ -503,6 +551,26 @@ class FaceAuthExecutor:
                     casc_drop_m),
             )
 
+        def split_consts(c):
+            return c[:n_det], c[n_det:n_det + 3], c[n_det + 3:]
+
+        def funnel(frames, *c):
+            det_c, pos_c, nn_c = split_consts(c)
+            B = frames.shape[0]
+            mframes, fidx, fvalid, motion, motion_dropped = stage_motion(
+                frames)
+            dmask, n_win_m, casc_drop_m = stage_detect(mframes, fvalid, det_c)
+            patches, wsel, wvalid, win_dropped_m = stage_gather(
+                mframes, dmask, n_win_m, pos_c)
+            s, auth, n_auth_m = stage_nn(patches, wvalid, nn_c)
+            return stage_scatter(B, fidx, motion, motion_dropped, n_win_m,
+                                 casc_drop_m, wsel, wvalid, win_dropped_m,
+                                 s, auth, n_auth_m)
+
+        self.stages = FunnelStages(
+            motion=stage_motion, detect=stage_detect, gather=stage_gather,
+            nn=stage_nn, scatter=stage_scatter, split_consts=split_consts,
+            window_capacity=W)
         self._consts = consts
         self._funnel = funnel
         self._single = jax.jit(funnel)

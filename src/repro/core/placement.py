@@ -104,7 +104,11 @@ def solve_cut(
                     rep = throughput_cost(cfg, profiles, link, cut, config_name=name)
                     obj = -rep.fps
                 reports.append(rep)
-                key = (obj, pipeline.index(cut) if cut in [b.name for b in pipeline.blocks] else 0)
+                # tie-break toward fewer on-node blocks ("offload as early
+                # as bandwidth allows"): the *configured* pipeline's cut
+                # index is the on-node block count — the unconfigured
+                # index would mis-order configs once optionals are dropped
+                key = (obj, cut_i)
                 if best is None or key < best[0]:
                     best = (key, cfg, cut, rep)
 

@@ -1,0 +1,39 @@
+"""Warm-then-average wall-clock measurement, dataclass-aware blocking.
+
+ONE implementation for every consumer — the hot-path benchmarks
+(``benchmarks/timing.py`` re-exports these) and the offload cut
+controller (``repro.camera.offload.controller``), whose measured Block
+descriptors feed ``solve_cut``.  A fix to blocking semantics or timer
+choice here reaches both at once.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+
+def block(out):
+    """Block until every device array in ``out`` is ready.
+
+    Handles pytrees and plain result dataclasses (``WirePayload``,
+    ``FAExecResult``) alike — an unexpanded dataclass would be a no-op
+    pytree leaf and the timer would stop before the device work finished.
+    """
+    import jax
+
+    if dataclasses.is_dataclass(out) and not isinstance(out, type):
+        out = vars(out)
+    jax.block_until_ready(out)
+
+
+def timed(fn, *args, reps: int = 3):
+    """(seconds_per_rep, last_output): one warm call (compile + caches),
+    then ``reps`` timed calls, blocking on device completion."""
+    out = fn(*args)
+    block(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    block(out)
+    return (time.perf_counter() - t0) / reps, out

@@ -1,0 +1,91 @@
+"""Pallas wire codec for TPU: block-scaled quantize + bit-pack in VMEM.
+
+The node side of an offload cut runs this right before the radio: each
+grid step loads a (block_rows, block) f32 tile of flattened payload
+blocks, computes the per-block absmax scale on the VPU, quantizes, and
+packs 4-bit pairs (or 8-bit values) into int8 bytes — the payload never
+returns to HBM at full precision.  The decode kernel is the cloud-side
+inverse (unpack, sign-extend, rescale).
+
+Quantization semantics are pinned to ``core/reduction.quantize_int8``
+(see ref.py); interpret-mode tests require bit-exact agreement with the
+jnp oracle.  16-bit payloads ship through the ref path (ops.py): the
+two-byte split is pure memory movement with nothing to fuse.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _encode_kernel(x_ref, p_ref, s_ref, *, bits: int):
+    x = x_ref[...]                                    # (bm, block) f32
+    qmax = 2 ** (bits - 1) - 1
+    scale = jnp.max(jnp.abs(x), axis=1, keepdims=True) / qmax
+    scale = jnp.where(scale == 0, 1.0, scale)
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(jnp.int32)
+    if bits == 8:
+        p_ref[...] = q.astype(jnp.int8)
+    else:                                             # 4-bit nibble pairs
+        pair = (q & 0xF).reshape(q.shape[0], -1, 2)
+        p_ref[...] = (pair[:, :, 0] | (pair[:, :, 1] << 4)).astype(jnp.int8)
+    s_ref[...] = scale.astype(jnp.float32)
+
+
+def _decode_kernel(p_ref, s_ref, o_ref, *, bits: int):
+    if bits == 8:
+        q = p_ref[...].astype(jnp.int32)
+    else:
+        p = p_ref[...].astype(jnp.int32) & 0xFF
+        lo = p & 0xF
+        hi = (p >> 4) & 0xF
+        lo = lo - ((lo & 0x8) << 1)                   # sign-extend nibbles
+        hi = hi - ((hi & 0x8) << 1)
+        q = jnp.stack([lo, hi], axis=-1).reshape(p.shape[0], -1)
+    o_ref[...] = q.astype(jnp.float32) * s_ref[...]
+
+
+def wire_encode_pallas(blocks, *, bits: int = 8, block_rows: int = 32,
+                       interpret: bool = False):
+    """(n_blocks, block) f32 -> (packed int8, scales (n_blocks, 1) f32).
+
+    ``n_blocks`` must divide into ``block_rows`` tiles (ops.py pads).
+    """
+    assert bits in (4, 8), bits
+    nb, block = blocks.shape
+    bm = min(block_rows, nb)
+    assert nb % bm == 0, (nb, bm)
+    pw = block * bits // 8
+    return pl.pallas_call(
+        functools.partial(_encode_kernel, bits=bits),
+        grid=(nb // bm,),
+        in_specs=[pl.BlockSpec((bm, block), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((bm, pw), lambda i: (i, 0)),
+                   pl.BlockSpec((bm, 1), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((nb, pw), jnp.int8),
+                   jax.ShapeDtypeStruct((nb, 1), jnp.float32)],
+        interpret=interpret,
+    )(blocks)
+
+
+def wire_decode_pallas(packed, scales, *, bits: int = 8,
+                       block_rows: int = 32, interpret: bool = False):
+    """(packed int8, scales) -> (n_blocks, block) f32 dequantized blocks."""
+    assert bits in (4, 8), bits
+    nb, pw = packed.shape
+    block = pw * 8 // bits
+    bm = min(block_rows, nb)
+    assert nb % bm == 0, (nb, bm)
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, bits=bits),
+        grid=(nb // bm,),
+        in_specs=[pl.BlockSpec((bm, pw), lambda i: (i, 0)),
+                  pl.BlockSpec((bm, 1), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm, block), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, block), jnp.float32),
+        interpret=interpret,
+    )(packed, scales)

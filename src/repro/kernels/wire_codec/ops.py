@@ -1,0 +1,142 @@
+"""jit'd wire-codec entry points + wire-size accounting (paper §III-A).
+
+The codec turns a cut-point payload tensor into what actually crosses the
+offload link: block-scaled intN bytes plus one f32 scale per block, the
+same 8-bit-datapath tradeoff the paper studies (8-bit costs 0.4% accuracy
+for 41% of the bytes^H^H^H power; 4-bit is past the knee).  Quantization
+semantics are shared with ``core/reduction.quantize_int8`` — an int8
+wire payload dequantizes to exactly ``dequantize_int8(quantize_int8(x))``
+(pinned by tests/test_kernels.py).
+
+Dispatch follows the repo convention (DESIGN.md §4): Pallas on TPU (or
+``interpret=True`` for tests) for 4/8-bit, the jnp oracle elsewhere;
+16-bit always ships through the oracle (pure byte movement).
+
+All entry points are traceable, so the offload executors fuse the codec
+into the node-side / cloud-side jit regions (DESIGN.md §10).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.wire_codec.kernel import (
+    wire_decode_pallas,
+    wire_encode_pallas,
+)
+from repro.kernels.wire_codec.ref import (
+    wire_decode_ref,
+    wire_encode_ref,
+)
+
+BLOCK = 256                      # default flat block (quantize_int8's)
+SCALE_BYTES = 4                  # one f32 scale per block
+
+
+def _use_pallas(use_pallas, bits):
+    if bits == 16:               # byte split only; nothing to fuse
+        return False
+    if use_pallas is None:
+        return jax.default_backend() == "tpu"
+    return bool(use_pallas)
+
+
+def _to_blocks(x, block):
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % block
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, block)
+
+
+def _pad_rows(a, bm):
+    pad = (-a.shape[0]) % bm
+    if pad:
+        a = jnp.pad(a, ((0, pad), (0, 0)))
+    return a
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "bits", "block", "use_pallas", "interpret"))
+def wire_encode(x, *, bits: int = 8, block: int = BLOCK,
+                use_pallas=None, interpret: bool = False):
+    """Payload tensor (any shape, f32-castable) -> (packed, scales).
+
+    packed: (n_blocks, block * bits // 8) int8 wire bytes.
+    scales: (n_blocks, 1) f32, one per flat block of ``block`` values.
+    """
+    blocks = _to_blocks(x.astype(jnp.float32), block)
+    nb = blocks.shape[0]
+    if _use_pallas(use_pallas, bits):
+        bm = min(32, nb)
+        packed, scales = wire_encode_pallas(
+            _pad_rows(blocks, bm), bits=bits, block_rows=bm,
+            interpret=interpret)
+        return packed[:nb], scales[:nb]
+    return wire_encode_ref(blocks, bits)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "shape", "bits", "block", "use_pallas", "interpret"))
+def wire_decode(packed, scales, shape, *, bits: int = 8, block: int = BLOCK,
+                use_pallas=None, interpret: bool = False):
+    """(packed, scales) -> f32 tensor of static ``shape``."""
+    nb = packed.shape[0]
+    if _use_pallas(use_pallas, bits):
+        bm = min(32, nb)
+        blocks = wire_decode_pallas(
+            _pad_rows(packed, bm), _pad_rows(scales, bm), bits=bits,
+            block_rows=bm, interpret=interpret)[:nb]
+    else:
+        blocks = wire_decode_ref(packed, scales, bits)
+    n = math.prod(shape)
+    return blocks.reshape(-1)[:n].reshape(shape)
+
+
+def wire_roundtrip(x, *, bits: int = 8, block: int = BLOCK,
+                   use_pallas=None, interpret: bool = False):
+    """encode-then-decode — the codec's end-to-end distortion operator."""
+    packed, scales = wire_encode(x, bits=bits, block=block,
+                                 use_pallas=use_pallas, interpret=interpret)
+    return wire_decode(packed, scales, tuple(x.shape), bits=bits,
+                       block=block, use_pallas=use_pallas,
+                       interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Wire-size accounting
+# ---------------------------------------------------------------------------
+
+
+def wire_bytes(n_values: int, bits: int | None, *, block: int = BLOCK,
+               value_bytes: float = 4.0) -> float:
+    """Wire bytes for ``n_values`` payload values at ``bits`` width.
+
+    ``bits=None`` means raw passthrough at ``value_bytes`` per value (f32
+    runtime representation = 4).  Quantized payloads pay bits/8 per value
+    plus one f32 scale per (partial) block.
+    """
+    if n_values <= 0:
+        return 0.0
+    if bits is None:
+        return float(n_values) * value_bytes
+    return (n_values * bits / 8.0
+            + math.ceil(n_values / block) * SCALE_BYTES)
+
+
+def wire_bytes_dynamic(n_values, bits: int | None, *, block: int = BLOCK,
+                       value_bytes: float = 4.0):
+    """Traceable ``wire_bytes``: ``n_values`` may be a traced int scalar.
+
+    Used by the offload executors to charge only *valid* (non-padding)
+    payload elements in-graph — the measured bytes a real variable-length
+    transmit would put on the air, while shapes stay static.
+    """
+    n = jnp.maximum(n_values, 0).astype(jnp.float32)
+    if bits is None:
+        return n * value_bytes
+    return n * (bits / 8.0) + jnp.ceil(n / block) * SCALE_BYTES

@@ -1,0 +1,74 @@
+"""Oracle: block-scaled quantize + bit-pack for cut-point payloads.
+
+Quantization semantics are shared with ``core/reduction.quantize_int8``
+(flat blocks, symmetric absmax/qmax scale, zero-blocks get scale 1,
+round-half-to-even) so a wire-codec int8 payload dequantizes to exactly
+``dequantize_int8(quantize_int8(x))``.  Packing layouts:
+
+  bits=8   one int8 byte per value                  (n_blocks, block)
+  bits=4   two values per byte, low nibble first    (n_blocks, block // 2)
+  bits=16  little-endian int16 as two int8 bytes    (n_blocks, block * 2)
+
+Scales are f32, one per block: (n_blocks, 1).  Wire size per block is
+``block * bits / 8`` payload bytes + 4 scale bytes.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _qparams(bits: int):
+    if bits not in (4, 8, 16):
+        raise ValueError(f"wire codec supports 4/8/16 bits, got {bits}")
+    return 2 ** (bits - 1) - 1
+
+
+def quantize_blocks_ref(blocks, bits: int):
+    """(n_blocks, block) f32 -> (q int32, scales f32 (n_blocks, 1))."""
+    qmax = _qparams(bits)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / qmax
+    scale = jnp.where(scale == 0, 1.0, scale)
+    q = jnp.clip(jnp.round(blocks / scale), -qmax, qmax).astype(jnp.int32)
+    return q, scale.astype(jnp.float32)
+
+
+def pack_ref(q, bits: int):
+    """Quantized int32 values (n_blocks, block) -> packed int8 bytes."""
+    nb = q.shape[0]
+    if bits == 8:
+        return q.astype(jnp.int8)
+    if bits == 4:
+        pair = (q & 0xF).reshape(nb, -1, 2)
+        return (pair[:, :, 0] | (pair[:, :, 1] << 4)).astype(jnp.int8)
+    lo = q & 0xFF
+    hi = (q >> 8) & 0xFF
+    return jnp.stack([lo, hi], axis=-1).reshape(nb, -1).astype(jnp.int8)
+
+
+def unpack_ref(packed, bits: int):
+    """Packed int8 bytes -> quantized int32 values (n_blocks, block)."""
+    nb = packed.shape[0]
+    p = packed.astype(jnp.int32) & 0xFF
+    if bits == 8:
+        return packed.astype(jnp.int32)
+    if bits == 4:
+        lo = p & 0xF
+        hi = (p >> 4) & 0xF
+        lo = lo - ((lo & 0x8) << 1)          # sign-extend the nibble
+        hi = hi - ((hi & 0x8) << 1)
+        return jnp.stack([lo, hi], axis=-1).reshape(nb, -1)
+    b = p.reshape(nb, -1, 2)
+    v = b[:, :, 0] | (b[:, :, 1] << 8)
+    return v - ((v & 0x8000) << 1)           # sign-extend 16 bits
+
+
+def wire_encode_ref(blocks, bits: int = 8):
+    """(n_blocks, block) f32 -> (packed int8, scales (n_blocks, 1) f32)."""
+    q, scale = quantize_blocks_ref(blocks, bits)
+    return pack_ref(q, bits), scale
+
+
+def wire_decode_ref(packed, scales, bits: int = 8):
+    """(packed, scales) -> (n_blocks, block) f32 dequantized blocks."""
+    return unpack_ref(packed, bits).astype(jnp.float32) * scales

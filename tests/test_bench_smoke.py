@@ -15,7 +15,7 @@ import tempfile
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SECTIONS = ("fa", "vr", "vj", "nn", "bssa", "detect", "fa_hotpath",
-            "roofline")
+            "offload", "roofline")
 
 
 def test_benchmark_smoke_all_sections():
@@ -38,3 +38,8 @@ def test_benchmark_smoke_all_sections():
         parity = {r[1]: r[2] for r in fa["rows"]}
         assert parity.get("funnel_count_parity") == "identical"
         assert float(parity.get("score_parity_int8", "1")) == 0.0
+        off = json.load(open(os.path.join(td, "BENCH_offload.json")))
+        orow = {r[1]: (r[2], r[3]) for r in off["rows"]}
+        assert orow["fa_knee_at_8bit"][0] == "True"
+        assert "agrees=True" in orow["fa_controller_choice"][1]
+        assert "agrees=True" in orow["vr_controller_choice"][1]

@@ -199,3 +199,126 @@ class TestReduction:
             _, dense, st_ = ef_compress_topk(x, st_, k_fraction=0.1)
             acc += dense
         assert float(jnp.linalg.norm(acc / 40 - x)) < 0.2 * float(jnp.linalg.norm(x))
+
+
+class TestReductionWireCodec:
+    """Satellite coverage: core/reduction invariants exercised through
+    tests/hypothesis_compat (wire-codec roundtrip exactness, error-feedback
+    convergence, and the 16/8/4-bit knee shape)."""
+
+    @given(st.integers(0, 2**31 - 1), st.integers(1, 4))
+    @settings(max_examples=15, deadline=None)
+    def test_wire_codec_int8_roundtrip_is_quantize_int8(self, seed, rows):
+        """For any input, the int8 wire codec's decode equals
+        dequantize_int8(quantize_int8(x)) bit-for-bit — the shared-
+        semantics contract between the kernel package and core/reduction."""
+        from repro.core.reduction import dequantize_int8, quantize_int8
+        from repro.kernels.wire_codec.ops import wire_roundtrip
+
+        # both sides under jit: the codec always runs inside the offload
+        # executors' jit regions, and XLA's constant-divisor rewrite makes
+        # eager-vs-jit scales differ by 1 ulp — compile-context parity is
+        # the real production contract
+        @jax.jit
+        def reduction_roundtrip(x):
+            q, s = quantize_int8(x, block=256)
+            return dequantize_int8(q, s, x.shape)
+
+        x = jax.random.normal(jax.random.PRNGKey(seed), (rows, 173)) * 5.0
+        deq = reduction_roundtrip(x)
+        y = wire_roundtrip(x, bits=8, use_pallas=False)
+        assert np.array_equal(np.asarray(deq), np.asarray(y))
+
+    @given(st.integers(0, 2**31 - 1))
+    @settings(max_examples=10, deadline=None)
+    def test_error_feedback_time_average_converges(self, seed):
+        """EF makes int8 compression unbiased over time: the running mean
+        of transmitted (dequantized) values converges to the true signal
+        far beyond one-shot quantization error."""
+        x = jax.random.normal(jax.random.PRNGKey(seed), (512,))
+        state = EFState.init(x)
+        acc = jnp.zeros_like(x)
+        n = 24
+        for _ in range(n):
+            _, deq, state = ef_compress_int8(x, state, block=128)
+            acc = acc + deq
+        mean_err = float(jnp.linalg.norm(acc / n - x))
+        one_shot = float(jnp.linalg.norm(
+            dequantize_int8(*quantize_int8(x, block=128), x.shape) - x))
+        assert mean_err < one_shot / 4
+        # and the residual itself stays bounded by one quantization step
+        assert float(jnp.abs(state.residual).max()) < 0.2
+
+    @given(st.integers(0, 2**31 - 1))
+    @settings(max_examples=10, deadline=None)
+    def test_bit_knee_shape(self, seed):
+        """§III-A knee: relative error is negligible at 16/8 bits and
+        jumps past the knee at 4 — for any input distribution scale."""
+        x = jax.random.normal(jax.random.PRNGKey(seed), (4096,))
+        nrm = float(jnp.linalg.norm(x))
+        rel = {b: float(jnp.linalg.norm(quantize_bits(x, b) - x)) / nrm
+               for b in (16, 8, 4)}
+        assert rel[16] < rel[8] < rel[4]
+        assert rel[8] < 0.02                 # 8-bit: within task tolerance
+        assert rel[4] > 0.05                 # 4-bit: past the knee
+        assert rel[16] < 1e-3
+
+
+class TestSolveCutTieBreak:
+    """Regression for the solve_cut tie-break wart: the key must use the
+    *configured* pipeline's cut index, pinning the documented "offload as
+    early as bandwidth allows" tie-break in both regimes."""
+
+    def _tied_pipeline(self):
+        # src -> filt (optional, free, sel=1) -> a -> b: every cut ships
+        # identical bytes, compute is free => all configs tie exactly.
+        return linear_pipeline("tied", [
+            dict(name="src", flops=0, bytes_in=0, bytes_out=1000,
+                 kind="source"),
+            dict(name="filt", flops=0.0, bytes_in=1000, bytes_out=1000,
+                 kind="optional", selectivity=1.0),
+            dict(name="a", flops=0.0, bytes_in=1000, bytes_out=1000),
+            dict(name="b", flops=0.0, bytes_in=1000, bytes_out=1000),
+        ])
+
+    def _free_profiles(self):
+        free = HardwareProfile("free", flops_per_s=1e12)
+        return {"src": HardwareProfile("s"), "filt": free, "a": free,
+                "b": free}
+
+    def test_throughput_tie_breaks_to_earliest_cut(self):
+        p = self._tied_pipeline()
+        sol = solve_cut(p, self._free_profiles(),
+                        HardwareProfile("l", link_bw=1e4), regime="throughput")
+        # all configs bottleneck on the same 10 fps link; the documented
+        # tie-break offloads as early as possible
+        assert sol.cut_after == "src"
+        assert sol.pipeline.index(sol.cut_after) == 0
+
+    def test_energy_tie_breaks_to_fewest_on_node_blocks(self):
+        p = self._tied_pipeline()
+        profs = self._free_profiles()
+        sol = solve_cut(p, profs, HardwareProfile("l", joules_per_byte=1e-9),
+                        regime="energy", duties={n: 0.0 for n in
+                                                 ("src", "filt", "a", "b")})
+        assert sol.cut_after == "src"
+
+    def test_tie_break_uses_configured_index(self):
+        """Among tied optima the returned configuration must minimize the
+        CONFIGURED cut index (= on-node block count), not the unconfigured
+        one — the exact wart fixed in placement.py."""
+        p = self._tied_pipeline()
+        profs = self._free_profiles()
+        link = HardwareProfile("l", link_bw=1e4)
+        sol = solve_cut(p, profs, link, regime="throughput")
+        tied = [r for r in sol.all_reports
+                if r.fps == pytest.approx(-(-sol.report.fps))]
+        assert len(tied) > 1                   # the tie is real
+        chosen_idx = sol.pipeline.index(sol.cut_after)
+        for rep in tied:
+            # no tied config has fewer on-node blocks than the winner
+            name = rep.config_name.split("cut=")[1]
+            subset = rep.config_name.split("|")[0]
+            cfg = p.configure(() if subset == "none"
+                              else tuple(subset.split("+")))
+            assert chosen_idx <= cfg.index(name)

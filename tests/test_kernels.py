@@ -385,3 +385,101 @@ class TestRwkvScan:
         ref = wkv_ref(r, k, v, w, u)
         np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                    rtol=1e-4, atol=1e-4)
+
+
+class TestWireCodec:
+    """Pallas wire codec: interpret-mode bit-exactness vs the jnp oracle,
+    and int8 semantics pinned to core/reduction.quantize_int8."""
+
+    @pytest.mark.parametrize("shape,bits", [
+        ((512,), 8), ((512,), 4),
+        ((3, 97), 8), ((3, 97), 4),           # needs flat-block padding
+        ((7, 20, 20), 8), ((7, 20, 20), 4),   # the vj window payload shape
+        ((1,), 8), ((1,), 4),
+        ((40, 256), 8), ((40, 256), 4),       # needs row padding (40 % 32)
+    ])
+    def test_pallas_encode_decode_bitexact_vs_ref(self, shape, bits):
+        from repro.kernels.wire_codec.ops import wire_decode, wire_encode
+
+        x = jax.random.normal(jax.random.PRNGKey(0), shape) * 11.0
+        p_ref, s_ref = wire_encode(x, bits=bits, use_pallas=False)
+        p_pal, s_pal = wire_encode(x, bits=bits, use_pallas=True,
+                                   interpret=True)
+        assert np.array_equal(np.asarray(p_ref), np.asarray(p_pal))
+        assert np.array_equal(np.asarray(s_ref), np.asarray(s_pal))
+        y_ref = wire_decode(p_ref, s_ref, shape, bits=bits, use_pallas=False)
+        y_pal = wire_decode(p_pal, s_pal, shape, bits=bits, use_pallas=True,
+                            interpret=True)
+        assert np.array_equal(np.asarray(y_ref), np.asarray(y_pal))
+
+    def test_int8_roundtrip_matches_reduction_quantizer_exactly(self):
+        """Wire-codec int8 == dequantize_int8(quantize_int8(x)) bit-for-bit
+        (the ISSUE's shared-semantics contract)."""
+        from repro.core.reduction import dequantize_int8, quantize_int8
+        from repro.kernels.wire_codec.ops import (
+            wire_encode, wire_roundtrip)
+
+        x = jax.random.normal(jax.random.PRNGKey(3), (5, 333)) * 7.0
+        # jit the reduction side: the codec runs inside jit regions, and
+        # XLA's constant-divisor rewrite shifts eager scales by 1 ulp
+        q, s = jax.jit(lambda v: quantize_int8(v, block=256))(x)
+        deq = jax.jit(
+            lambda a, b: dequantize_int8(a, b, x.shape))(q, s)
+        for use_pallas in (False, True):
+            y = wire_roundtrip(x, bits=8, use_pallas=use_pallas,
+                               interpret=use_pallas)
+            assert np.array_equal(np.asarray(deq), np.asarray(y))
+        p, sc = wire_encode(x, bits=8, use_pallas=False)
+        assert np.array_equal(np.asarray(p).reshape(-1)[: x.size],
+                              np.asarray(q).reshape(-1)[: x.size])
+        assert np.array_equal(np.asarray(sc), np.asarray(s))
+
+    @pytest.mark.parametrize("bits", [4, 8, 16])
+    def test_packed_values_roundtrip_exactly(self, bits):
+        """decode(encode(x)) == dequantized quantization of x: the pack /
+        unpack byte plumbing is lossless at every width."""
+        from repro.kernels.wire_codec.ref import (
+            pack_ref, quantize_blocks_ref, unpack_ref)
+
+        x = (jax.random.normal(jax.random.PRNGKey(4), (6, 256)) * 9.0)
+        q, _s = quantize_blocks_ref(x, bits)
+        assert np.array_equal(np.asarray(unpack_ref(pack_ref(q, bits), bits)),
+                              np.asarray(q))
+
+    def test_zero_blocks_and_extremes(self):
+        from repro.kernels.wire_codec.ops import wire_roundtrip
+
+        x = jnp.concatenate([jnp.zeros((256,)),
+                             jnp.array([127.0, -127.0, 1e-8, -1e-8]),
+                             jnp.zeros((252,))])
+        for bits in (4, 8, 16):
+            y = wire_roundtrip(x, bits=bits, use_pallas=False)
+            assert np.all(np.isfinite(np.asarray(y)))
+            assert float(y[0]) == 0.0
+        y8 = wire_roundtrip(x, bits=8, use_pallas=True, interpret=True)
+        np.testing.assert_allclose(float(y8[256]), 127.0)
+        np.testing.assert_allclose(float(y8[257]), -127.0)
+
+    def test_wire_bytes_accounting(self):
+        from repro.kernels.wire_codec.ops import wire_bytes
+
+        # one 256-value block: bits/8 per value + one f32 scale
+        assert wire_bytes(256, 8) == 256 + 4
+        assert wire_bytes(256, 4) == 128 + 4
+        assert wire_bytes(256, 16) == 512 + 4
+        assert wire_bytes(257, 8) == 257 + 8        # second (partial) block
+        assert wire_bytes(100, None) == 400.0       # raw f32 passthrough
+        assert wire_bytes(0, 8) == 0.0
+
+    def test_knee_shape_on_wire(self):
+        """The §III-A knee as measured through the codec: halving bits
+        halves wire bytes; error is ~flat 16->8 and jumps at 4."""
+        from repro.kernels.wire_codec.ops import wire_bytes, wire_roundtrip
+
+        x = jax.random.normal(jax.random.PRNGKey(5), (4096,))
+        err = {b: float(jnp.linalg.norm(wire_roundtrip(x, bits=b,
+                                                       use_pallas=False) - x))
+               for b in (16, 8, 4)}
+        assert err[16] < err[8] < err[4]
+        assert err[4] / err[8] > 4.0                # the knee: 4-bit is past it
+        assert wire_bytes(4096, 4) < wire_bytes(4096, 8) < wire_bytes(4096, 16)

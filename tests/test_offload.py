@@ -1,0 +1,352 @@
+"""Offload runtime tests: split-executor exactness vs the fused funnels,
+wire-payload byte accounting vs the analytic cost model (the drift fence),
+link-simulator semantics, and the measurement-driven cut controller."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.camera.offload import (
+    BACKSCATTER,
+    CutController,
+    FaceAuthOffloadExecutor,
+    LinkProfile,
+    VROffloadExecutor,
+    WirePayload,
+    link_energy_w,
+    simulate_shared_link,
+)
+from repro.camera.pipelines import (
+    FAWorkloadStats,
+    FaceAuthExecutor,
+    calibrate_fa,
+    fa_pipeline,
+    fa_profiles,
+)
+from repro.core.costmodel import HardwareProfile
+from repro.core.pipeline import linear_pipeline
+
+FA_CUTS = ("sensor", "motion", "vj", "nn")
+_RESULT_FIELDS = ("motion", "n_windows", "n_auth", "scores", "window_id",
+                  "window_valid", "auth", "windows_dropped", "motion_dropped",
+                  "cascade_dropped")
+
+
+@pytest.fixture(scope="module")
+def fa_setup():
+    from benchmarks.workloads import fa_cascade, fa_scan
+    from repro.camera.face_nn import train_face_nn
+    from repro.camera.synthetic import face_dataset, security_video
+
+    frames, _truth = security_video(n_frames=10, motion_frames=5, seed=1)
+    casc = fa_cascade(smoke=True)
+    X, y, _ = face_dataset(n_per_class=80, seed=3)
+    nn = train_face_nn(X, y, steps=60)
+    sf, st, ad = fa_scan(True)
+    ex = FaceAuthExecutor(casc, nn, frames.shape[1], frames.shape[2],
+                          scale_factor=sf, step=st, adaptive=ad)
+    ex.calibrate(frames)
+    fj = jnp.asarray(frames)
+    base = ex(fj)
+    offs = {(cut, bits): FaceAuthOffloadExecutor(ex, cut, bits=bits)
+            for cut in FA_CUTS for bits in (None, 8)}
+    return ex, fj, base, offs
+
+
+def _assert_result_equal(a, b, fields=_RESULT_FIELDS):
+    for f in fields:
+        assert np.array_equal(np.asarray(getattr(a, f)),
+                              np.asarray(getattr(b, f))), f
+
+
+class TestFaceAuthOffload:
+    @pytest.mark.parametrize("cut", FA_CUTS)
+    def test_raw_split_is_bitexact_vs_fused(self, fa_setup, cut):
+        """bits=None: node+cloud = the fused funnel, field for field."""
+        ex, fj, base, offs = fa_setup
+        res, payload = offs[(cut, None)](fj)
+        _assert_result_equal(base, res)
+        assert payload.cut == cut and payload.bits is None
+
+    def test_wire_bytes_shrink_down_the_funnel(self, fa_setup):
+        """Measured (valid-element) bytes must shrink at every stage —
+        the paper's data-reduction funnel, observed on the wire."""
+        ex, fj, base, offs = fa_setup
+        b = {cut: offs[(cut, 8)].encode(fj).nbytes() for cut in FA_CUTS}
+        assert b["sensor"] > b["motion"] > b["vj"] > b["nn"]
+
+    def test_capacity_vs_measured_gap(self, fa_setup):
+        """Valid-element accounting charges less than the static padded
+        size whenever capacity padding exists (the compaction win)."""
+        ex, fj, base, offs = fa_setup
+        pay = offs[("vj", 8)].encode(fj)
+        assert pay.nbytes() < pay.capacity_bytes()
+
+    def test_codec_bits_halve_wire_bytes(self, fa_setup):
+        ex, fj, base, offs = fa_setup
+        b8 = offs[("vj", 8)].encode(fj).nbytes()
+        b4 = FaceAuthOffloadExecutor(ex, "vj", bits=4).encode(fj).nbytes()
+        braw = offs[("vj", None)].encode(fj).nbytes()
+        assert b8 < 0.30 * braw            # int8 vs f32: ~4x + sideband
+        assert b4 < 0.65 * b8              # nibbles halve the codec bytes
+
+    def test_nn_cut_int8_scores_preserve_auth_decisions(self, fa_setup):
+        """The §III 'ship the decision' cut: int8-coded scores keep every
+        auth decision (auth bits ship exactly) and stay within one codec
+        step of the fused scores."""
+        ex, fj, base, offs = fa_setup
+        res, _pay = offs[("nn", 8)](fj)
+        for f in ("motion", "n_windows", "n_auth", "auth", "window_id",
+                  "window_valid"):
+            assert np.array_equal(np.asarray(getattr(base, f)),
+                                  np.asarray(getattr(res, f))), f
+        d = np.abs(np.asarray(base.scores) - np.asarray(res.scores)).max()
+        assert d < 1.0 / 127                # one int8 step of a [0,1] score
+
+    def test_measured_bytes_match_analytic_descriptors(self, fa_setup):
+        """Satellite drift fence: the hand-entered bytes_out/selectivity
+        tables in the cost model must agree with what the runtime actually
+        puts on the wire (8-bit codec ~ the paper's 8-bit pixels), within
+        codec scale + sideband overhead."""
+        ex, fj, base, offs = fa_setup
+        stats = FAWorkloadStats(
+            n_frames=int(fj.shape[0]),
+            motion_frames=max(int(np.asarray(base.motion).sum()), 1),
+            windows_to_nn=max(int(np.asarray(base.n_windows).sum()), 1))
+        pipe = fa_pipeline(stats)
+        n = int(fj.shape[0])
+        for cut in ("sensor", "motion", "vj"):
+            measured = offs[(cut, 8)].encode(fj).nbytes() / n
+            analytic = pipe.cut_payload_bytes(pipe.index(cut))
+            assert measured == pytest.approx(analytic, rel=0.10), cut
+        # the post-NN payload is sideband-dominated; both must be tiny
+        # (the paper ships a 1-bit decision)
+        assert offs[("nn", 8)].encode(fj).nbytes() / n < 150
+        assert pipe.cut_payload_bytes(pipe.index("nn")) < 1
+
+
+class TestVROffload:
+    @pytest.fixture(scope="class")
+    def vr_setup(self):
+        from repro.camera.bssa import GridSpec
+        from repro.camera.pipelines import VRRigExecutor
+        from repro.camera.synthetic import stereo_pair
+
+        views = [stereo_pair(h=48, w=64, max_disp=4, seed=2 + s)[:2]
+                 for s in range(2)]
+        lefts = jnp.stack([v[0] for v in views])
+        rights = jnp.stack([v[1] for v in views])
+        base = VRRigExecutor(GridSpec(sigma_spatial=8), max_disp=4,
+                             n_iters=2, rig_parallel=False)
+        lp0, rp0, _d = base(lefts, rights)
+        return base, lefts, rights, lp0, rp0
+
+    @pytest.mark.parametrize("cut", VROffloadExecutor.CUTS)
+    def test_raw_split_is_bitexact(self, vr_setup, cut):
+        base, lefts, rights, lp0, rp0 = vr_setup
+        off = VROffloadExecutor(base, cut, bits=None)
+        (lp, rp), pay = off(lefts, rights)
+        assert np.array_equal(np.asarray(lp0), np.asarray(lp))
+        assert np.array_equal(np.asarray(rp0), np.asarray(rp))
+        assert pay.nbytes() > 0
+
+    def test_knee_on_panorama(self, vr_setup):
+        base, lefts, rights, lp0, rp0 = vr_setup
+        err = {}
+        for bits in (8, 4):
+            (lp, _rp), _ = VROffloadExecutor(base, "capture",
+                                             bits=bits)(lefts, rights)
+            err[bits] = float(jnp.abs(lp - lp0).max())
+        assert err[8] < 0.02               # 8-bit views: sub-1% panorama
+        assert err[4] > err[8]             # 4-bit is past the knee
+
+    def test_depth_cut_ships_more_than_capture(self, vr_setup):
+        """The runtime surfaces what the linear cost model hides: the §IV
+        stitch consumes full-res views, so the mid-pipeline cut ships
+        views + depths > raw views."""
+        base, lefts, rights, *_ = vr_setup
+        b_cap = VROffloadExecutor(base, "capture",
+                                  bits=8).encode(lefts, rights).nbytes()
+        b_dep = VROffloadExecutor(base, "depth",
+                                  bits=8).encode(lefts, rights).nbytes()
+        assert b_dep > b_cap
+
+
+class TestLinkSimulator:
+    def test_energy_is_bytes_times_jpb(self):
+        tr = np.array([[1000.0, 500.0, 0.0]])
+        rep = simulate_shared_link(tr, BACKSCATTER, frame_period_s=1.0)
+        assert rep.joules == pytest.approx(1500.0 * BACKSCATTER.joules_per_byte)
+        assert rep.joules == pytest.approx(
+            3 * link_energy_w(500.0, 1.0, BACKSCATTER))
+
+    def test_uncontended_latency_is_serialization_time(self):
+        link = LinkProfile("l", bytes_per_s=1000.0, latency_s=0.01)
+        rep = simulate_shared_link(np.array([[100.0] * 5]), link,
+                                   frame_period_s=1.0)
+        assert rep.latency_s == pytest.approx(0.11)      # 0.01 + 100/1000
+        assert rep.utilization < 0.2
+
+    def test_contention_grows_latency(self):
+        link = LinkProfile("l", bytes_per_s=1000.0)
+        lat = {}
+        for n in (1, 4, 8):
+            tr = np.full((n, 20), 400.0)
+            lat[n] = simulate_shared_link(tr, link, 1.0).mean_latency_s
+        assert lat[1] < lat[4] < lat[8]
+
+    def test_oversubscription_queues_unboundedly(self):
+        link = LinkProfile("l", bytes_per_s=1000.0)
+        tr = np.full((4, 30), 500.0)       # offered 2x capacity
+        rep = simulate_shared_link(tr, link, 1.0)
+        assert rep.utilization == pytest.approx(1.0, abs=0.05)
+        # queueing: the last frame waits ~half the trace duration
+        assert rep.max_latency_s > 10.0
+        assert rep.realtime_fraction(1.0) < 0.2
+
+    def test_duty_scales_offered_load(self):
+        link = LinkProfile("l", bytes_per_s=1000.0)
+        tr = np.full((4, 30), 500.0)
+        busy = simulate_shared_link(tr, link, 1.0, duty=1.0)
+        idle = simulate_shared_link(tr, link, 1.0, duty=0.4)
+        assert idle.mean_latency_s < busy.mean_latency_s
+        assert idle.offered_bps == pytest.approx(busy.offered_bps * 0.4)
+
+    def test_zero_byte_frames_transmit_nothing(self):
+        """A quiet frame (0 B after the motion cut) keys up no radio:
+        no framing latency, no queue occupancy, no energy."""
+        link = LinkProfile("l", bytes_per_s=1000.0, latency_s=0.01,
+                           joules_per_byte=1e-6)
+        rep = simulate_shared_link(np.array([[0.0, 100.0, 0.0]]), link, 1.0)
+        assert rep.latency_s[0, 0] == 0.0 and rep.latency_s[0, 2] == 0.0
+        assert rep.latency_s[0, 1] == pytest.approx(0.11)
+        assert rep.joules == pytest.approx(100.0 * 1e-6)
+        all_quiet = simulate_shared_link(np.zeros((4, 10)), link, 1.0)
+        assert all_quiet.utilization == 0.0
+        assert all_quiet.joules == 0.0
+
+    def test_conservation(self):
+        link = LinkProfile("l", bytes_per_s=123.0)
+        tr = np.array([[10.0, 20.0], [30.0, 40.0]])
+        rep = simulate_shared_link(tr, link, 1.0)
+        assert rep.bytes_total == 100.0
+        assert rep.latency_s.shape == (2, 2)
+        assert np.all(rep.latency_s > 0)
+
+
+class _FakeSplitExec:
+    """Deterministic stand-in with the split-executor protocol, for
+    controller tests that must not depend on wall-clock noise."""
+
+    def __init__(self, cut, wire_bytes):
+        self.cut = cut
+        self._b = float(wire_bytes)
+
+    def encode(self, frames):
+        return WirePayload(cut=self.cut, bits=8,
+                           arrays={"x": jnp.zeros((1,))}, meta={},
+                           wire_b=jnp.asarray(self._b, jnp.float32))
+
+    def decode_run(self, payload):
+        return jnp.zeros(())
+
+
+class TestCutController:
+    def _template(self):
+        return linear_pipeline("toy", [
+            dict(name="src", flops=0, bytes_in=0, bytes_out=1000,
+                 kind="source"),
+            dict(name="filt", flops=1e3, bytes_in=1000, bytes_out=200,
+                 kind="optional", selectivity=0.5),
+            dict(name="heavy", flops=1e6, bytes_in=200, bytes_out=10),
+        ])
+
+    def _profiles(self):
+        return {
+            "src": HardwareProfile("s", p_active_w=10e-6, p_leak_w=10e-6),
+            "filt": HardwareProfile("f", flops_per_s=1e6, p_active_w=20e-6,
+                                    p_leak_w=5e-6),
+            "heavy": HardwareProfile("h", flops_per_s=1e6, p_active_w=100e-6,
+                                     p_leak_w=50e-6),
+        }
+
+    def _controller(self, wire, **kw):
+        link = LinkProfile("rf", bytes_per_s=1e4, joules_per_byte=1e-7)
+        return CutController(
+            lambda cut: _FakeSplitExec(cut, wire[cut]),
+            cuts=("src", "filt", "heavy"), template=self._template(),
+            profiles=self._profiles(), link=link, **kw)
+
+    def test_fit_reproduces_measured_bytes_exactly(self):
+        wire = {"src": 1000.0, "filt": 120.0, "heavy": 7.0}
+        ctl = self._controller(wire, regime="energy")
+        ctl.calibrate(jnp.zeros((4, 2, 2)))
+        pipe = ctl.measured_pipeline()
+        for cut, b in wire.items():
+            got = pipe.cut_payload_bytes(pipe.index(cut))
+            assert got == pytest.approx(b / 4.0), cut    # per unit (4 frames)
+
+    def test_chosen_cut_is_exhaustive_measured_optimum(self):
+        wire = {"src": 4000.0, "filt": 120.0, "heavy": 7.0}
+        ctl = self._controller(wire, regime="energy",
+                               duties={"src": 1.0, "filt": 1.0, "heavy": 1.0})
+        ctl.calibrate(jnp.zeros((4, 2, 2)))
+        rep = ctl.report()
+        assert rep.chosen_cut == rep.measured_best_cut
+        assert rep.agrees
+        assert rep.chosen_cut == min(rep.measured_objectives,
+                                     key=rep.measured_objectives.get)
+
+    def test_measured_bytes_flip_the_decision(self):
+        """If the wire says filtering does NOT shrink the payload, the
+        controller must stop cutting late — the loop is actually closed."""
+        duties = {"src": 1.0, "filt": 1.0, "heavy": 1.0}
+        shrink = {"src": 4000.0, "filt": 120.0, "heavy": 7.0}
+        ctl = self._controller(shrink, regime="energy", duties=duties)
+        ctl.calibrate(jnp.zeros((4, 2, 2)))
+        choice_shrink = ctl.report().chosen_cut
+        bloat = {"src": 40.0, "filt": 4000.0, "heavy": 4000.0}
+        ctl2 = self._controller(bloat, regime="energy", duties=duties)
+        ctl2.calibrate(jnp.zeros((4, 2, 2)))
+        choice_bloat = ctl2.report().chosen_cut
+        assert choice_shrink != choice_bloat
+        assert choice_bloat == "src"
+
+    def test_byte_scale_extrapolation(self):
+        wire = {"src": 100.0, "filt": 50.0, "heavy": 10.0}
+        ctl = self._controller(wire, regime="throughput", byte_scale=10.0)
+        ctl.calibrate(jnp.zeros((4, 2, 2)))
+        pipe = ctl.measured_pipeline()
+        assert pipe.cut_payload_bytes(pipe.index("src")) == pytest.approx(
+            10.0 * 100.0 / 4.0)
+
+    def test_fa_controller_end_to_end(self, fa_setup):
+        """On the live §III funnel: solver choice == measured optimum, and
+        the analytic model's predicted ranking matches the measured one."""
+        ex, fj, base, offs = fa_setup
+        stats = FAWorkloadStats(
+            n_frames=int(fj.shape[0]),
+            motion_frames=max(int(np.asarray(base.motion).sum()), 1),
+            windows_to_nn=max(int(np.asarray(base.n_windows).sum()), 1))
+        cal = calibrate_fa(stats)
+        profiles = fa_profiles()
+        profiles["nn"] = cal.nn_profile()
+        link = dataclasses.replace(
+            BACKSCATTER, joules_per_byte=cal.rf_joules_per_byte)
+        ctl = CutController(
+            lambda cut: offs[(cut, 8)], cuts=FA_CUTS,
+            template=fa_pipeline(stats), profiles=profiles, link=link,
+            regime="energy",
+            duties={"sensor": 1.0, "motion": 1.0, "vj": 0.0, "nn": 1.0})
+        ctl.calibrate(fj)
+        rep = ctl.report()
+        assert rep.agrees
+        assert rep.rank_agreement >= 0.8
+        # measured payloads reproduce through the fitted pipeline
+        mp = rep.measured_pipeline
+        for m in rep.measurements:
+            assert mp.cut_payload_bytes(mp.index(m.cut)) == pytest.approx(
+                m.bytes_per_unit)
