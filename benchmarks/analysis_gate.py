@@ -1,0 +1,37 @@
+"""``analysis`` benchmark section: the static contract gate as a report.
+
+Runs the repro.analysis pass families over the registered universe and
+emits per-family subject/finding counts plus the single number that
+matters: ``non_baselined`` (must be 0 — same contract tier-1 enforces via
+tests/test_analysis.py).
+
+Smoke mode runs only the spec-level families (kernel legality +
+cut soundness): they cover every kernel package and every declared cut in
+a couple of seconds, while the jaxpr families re-trace all 34 executor
+targets (minutes of cascade/NN setup) — that full sweep belongs to the
+non-smoke run and the tier-1 gate test.
+"""
+
+from __future__ import annotations
+
+
+def rows(smoke: bool = False):
+    from repro.analysis import run_analysis
+    from repro.analysis.report import Baseline
+
+    only = ("kernel", "cut") if smoke else None
+    report = run_analysis(only=only)
+    baseline = Baseline.load()
+    out = []
+    for res in report.results:
+        out.append(("analysis", f"{res.family}_subjects", len(res.subjects),
+                    "analyzed units"))
+        out.append(("analysis", f"{res.family}_findings", len(res.findings),
+                    "total (incl. baselined)"))
+    new = report.new_findings(baseline)
+    out.append(("analysis", "baselined", len(report.findings) - len(new),
+                "accepted via analysis/baseline.json"))
+    out.append(("analysis", "non_baselined", len(new),
+                "gate: must be 0" + (" (smoke: kernel+cut only)" if smoke
+                                     else "")))
+    return out

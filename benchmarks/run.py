@@ -87,6 +87,14 @@ def _offload(smoke=False):
     return offload_tradeoffs.rows(smoke=smoke)
 
 
+@section("analysis")
+def _analysis(smoke=False):
+    # static contract gate (BENCH_analysis.json carries the non_baselined
+    # count — the same 0 the tier-1 gate test enforces)
+    from benchmarks import analysis_gate
+    return analysis_gate.rows(smoke=smoke)
+
+
 @section("roofline")
 def _roofline(smoke=False):
     from benchmarks import roofline

@@ -1,0 +1,10 @@
+"""Static contract analyzer (DESIGN.md §11): jaxpr- and spec-level lint
+for dispatch discipline, precision domains, Pallas block legality, and
+offload-cut soundness.  Run with ``python -m repro.analysis``."""
+
+from repro.analysis.cli import run_analysis
+from repro.analysis.report import (AnalysisReport, Baseline, Finding,
+                                   PassResult)
+
+__all__ = ["AnalysisReport", "Baseline", "Finding", "PassResult",
+           "run_analysis"]

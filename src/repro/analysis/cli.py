@@ -1,0 +1,77 @@
+"""``python -m repro.analysis`` — run the static contract analyzer.
+
+Exit code 0 iff every finding is baselined (or, with ``--strict``, iff
+there are no findings at all).  ``--update-baseline`` rewrites
+``analysis/baseline.json`` to accept the current findings — a deliberate,
+reviewed action (DESIGN.md §11), never done implicitly.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.analysis.report import (DEFAULT_BASELINE_PATH, AnalysisReport,
+                                   Baseline)
+
+
+def run_analysis(only=None) -> AnalysisReport:
+    """Build the analyzed universe and run the requested pass families."""
+    import jax
+
+    # precision/dispatch results are only platform-stable with x64 off
+    jax.config.update("jax_enable_x64", False)
+
+    from repro.analysis.passes import run_passes
+    from repro.analysis.registry import build_context
+
+    return run_passes(build_context(), only=only)
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="jaxpr/spec-level static contract analyzer")
+    p.add_argument("--json", metavar="PATH",
+                   help="write the full JSON report to PATH ('-' = stdout)")
+    p.add_argument("--strict", action="store_true",
+                   help="ignore the baseline: any finding fails (pre-merge)")
+    p.add_argument("--baseline", default=DEFAULT_BASELINE_PATH,
+                   help="baseline file (default: the checked-in one)")
+    p.add_argument("--update-baseline", action="store_true",
+                   help="accept current findings into the baseline file")
+    p.add_argument("--only", metavar="FAMILIES",
+                   help="comma-separated pass families "
+                        "(dispatch,precision,kernel,cut)")
+    args = p.parse_args(argv)
+
+    only = tuple(args.only.split(",")) if args.only else None
+    report = run_analysis(only=only)
+    baseline = None if args.strict else Baseline.load(args.baseline)
+
+    if args.update_baseline:
+        Baseline.from_report(report).save(args.baseline)
+        print(f"baseline updated: {args.baseline} "
+              f"({len(report.findings)} accepted findings)")
+        return 0
+
+    doc = report.to_dict(baseline)
+    if args.json == "-":
+        json.dump(doc, sys.stdout, indent=2)
+        print()
+    elif args.json:
+        with open(args.json, "w") as fh:
+            json.dump(doc, fh, indent=2)
+
+    for line in report.summary_lines(baseline):
+        print(line)
+    new = report.new_findings(baseline)
+    for f in new:
+        print(f"  NEW {f}")
+    if new:
+        mode = "strict" if args.strict else "non-baselined"
+        print(f"FAIL: {len(new)} {mode} finding(s)")
+        return 1
+    print("OK")
+    return 0

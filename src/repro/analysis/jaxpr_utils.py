@@ -1,0 +1,263 @@
+"""Jaxpr walking + a small guard-propagation dataflow (DESIGN.md §11).
+
+Everything here is *static*: we trace executors with ``jax.make_jaxpr`` and
+inspect equations — nothing executes.
+
+The guard lattice tracks, per intermediate value, whether it has been
+deliberately bounded from below ("lo"), above ("hi"), or both.  ``max`` with
+anything contributes "lo", ``min`` contributes "hi", ``clamp``/``iota``/
+literals/consts are bounded on both sides, and elementwise/shape ops
+propagate the *intersection* of their operands' guards.  A non-``fill``
+gather whose index operand is not two-sided-guarded is a host-of-UB hazard
+(XLA clamps, TPU wraps, interpret modes differ) and gets flagged; so does a
+float→int ``convert_element_type`` of an unguarded float (NaN/±inf casts are
+backend-defined *before* any later clip can save them).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+from jax.core import ClosedJaxpr, Jaxpr, Literal
+
+
+BOTH = frozenset(("lo", "hi"))
+NONE = frozenset()
+
+# wide dtypes that indicate an implicit x64 promotion leak
+WIDE_DTYPES = ("float64", "int64", "uint64", "complex128")
+
+# primitives that yield values bounded on both sides by construction
+_ORIGIN_BOTH = {"iota", "clamp", "rem", "argmin", "argmax",
+                "population_count", "clz"}
+
+# single-data-operand pass-throughs: out guards = operand guards
+_PASSTHROUGH = {"reshape", "broadcast_in_dim", "transpose", "squeeze",
+                "slice", "rev", "copy", "stop_gradient", "floor", "ceil",
+                "round", "convert_element_type", "reduce_min", "reduce_max",
+                "reduce_or", "reduce_and", "expand_dims", "real", "imag"}
+
+# n-ary elementwise combiners: out guards = intersection over data operands
+_INTERSECT = {"add", "sub", "mul", "div", "pow", "integer_pow",
+              "concatenate", "pad", "nextafter", "shift_right_logical",
+              "shift_right_arithmetic", "shift_left"}
+
+
+def _is_wide(dtype) -> bool:
+    return str(dtype) in WIDE_DTYPES
+
+
+@dataclasses.dataclass
+class EqnSite:
+    """One visited equation with its guard context."""
+
+    path: str          # stable-ish location: nesting of "<idx>:<prim>"
+    eqn: object        # jax.core.JaxprEqn
+    in_guards: list    # guard set per invar, aligned with eqn.invars
+    depth: int
+    in_pallas: bool
+
+
+def _sub_closed(obj) -> ClosedJaxpr | None:
+    if isinstance(obj, ClosedJaxpr):
+        return obj
+    if isinstance(obj, Jaxpr):
+        return ClosedJaxpr(obj, ())
+    return None
+
+
+def subjaxprs(eqn):
+    """Yield (tag, ClosedJaxpr) for every jaxpr nested in eqn.params."""
+    for key, val in eqn.params.items():
+        sub = _sub_closed(val)
+        if sub is not None:
+            yield key, sub
+        elif isinstance(val, (tuple, list)):
+            for i, item in enumerate(val):
+                sub = _sub_closed(item)
+                if sub is not None:
+                    yield f"{key}[{i}]", sub
+
+
+def walk(closed: ClosedJaxpr,
+         visit: Callable[[EqnSite], None],
+         in_guards=None) -> list:
+    """Visit every eqn (recursively) with guard dataflow; return out guards.
+
+    ``visit`` sees every equation at every nesting depth exactly once.
+    Guard propagation recurses through pjit/scan/cond/while/custom-call
+    bodies by mapping caller operand guards onto callee invars; unknown
+    primitives default to unguarded outputs (sound for the checks built on
+    top, which only ever *trust* a guard, never its absence).
+    """
+    return _walk(closed, visit, in_guards, path="", depth=0,
+                 in_pallas=False)
+
+
+def _walk(closed, visit, in_guards, *, path, depth, in_pallas):
+    jaxpr = closed.jaxpr
+    env = {}
+
+    def write(var, guards):
+        env[var] = frozenset(guards)
+
+    def read(atom):
+        if isinstance(atom, Literal):
+            return BOTH
+        return env.get(atom, NONE)
+
+    if in_guards is None:
+        in_guards = [NONE] * len(jaxpr.invars)
+    for var, g in zip(jaxpr.invars, in_guards):
+        write(var, g)
+    for var in jaxpr.constvars:
+        write(var, BOTH)       # consts are known, finite tables
+
+    for idx, eqn in enumerate(jaxpr.eqns):
+        prim = eqn.primitive.name
+        here = f"{path}/{idx}:{prim}" if path else f"{idx}:{prim}"
+        ins = [read(v) for v in eqn.invars]
+        visit(EqnSite(path=here, eqn=eqn, in_guards=ins, depth=depth,
+                      in_pallas=in_pallas or prim == "pallas_call"))
+
+        outs = _transfer(prim, eqn, ins, visit, here, depth, in_pallas)
+        for var, g in zip(eqn.outvars, outs):
+            write(var, g)
+
+    return [read(v) for v in jaxpr.outvars]
+
+
+def _intersect(guard_sets):
+    out = BOTH
+    for g in guard_sets:
+        out = out & g
+    return out
+
+
+def _transfer(prim, eqn, ins, visit, here, depth, in_pallas):
+    """Guard transfer function; recurses into nested jaxprs."""
+    n_out = len(eqn.outvars)
+
+    if prim in ("pjit", "closed_call", "core_call", "remat", "checkpoint",
+                "custom_jvp_call", "custom_vjp_call", "custom_jvp_call_jaxpr",
+                "custom_vjp_call_jaxpr"):
+        for _, sub in subjaxprs(eqn):
+            n_const = len(sub.jaxpr.constvars)
+            mapped = ins[-len(sub.jaxpr.invars):] \
+                if len(ins) >= len(sub.jaxpr.invars) else None
+            outs = _walk(sub, visit, mapped, path=here, depth=depth + 1,
+                         in_pallas=in_pallas)
+            del n_const
+            if len(outs) == n_out:
+                return outs
+            break
+        return [NONE] * n_out
+
+    if prim == "scan":
+        sub = eqn.params.get("jaxpr")
+        sub = _sub_closed(sub)
+        if sub is not None and len(sub.jaxpr.invars) == len(ins):
+            outs = _walk(sub, visit, ins, path=here, depth=depth + 1,
+                         in_pallas=in_pallas)
+            n_carry = eqn.params.get("num_carry", 0)
+            if len(outs) >= n_out - n_carry:
+                return outs[:n_out] if len(outs) >= n_out \
+                    else outs + [NONE] * (n_out - len(outs))
+        elif sub is not None:
+            _walk(sub, visit, None, path=here, depth=depth + 1,
+                  in_pallas=in_pallas)
+        return [NONE] * n_out
+
+    if prim == "while":
+        for tag, sub in subjaxprs(eqn):
+            _walk(sub, visit, None, path=f"{here}.{tag}", depth=depth + 1,
+                  in_pallas=in_pallas)
+        return [NONE] * n_out
+
+    if prim == "cond":
+        branch_outs = []
+        for tag, sub in subjaxprs(eqn):
+            mapped = ins[1:] if len(sub.jaxpr.invars) == len(ins) - 1 \
+                else None
+            branch_outs.append(
+                _walk(sub, visit, mapped, path=f"{here}.{tag}",
+                      depth=depth + 1, in_pallas=in_pallas))
+        if branch_outs and all(len(o) == n_out for o in branch_outs):
+            return [_intersect([o[i] for o in branch_outs])
+                    for i in range(n_out)]
+        return [NONE] * n_out
+
+    if prim in ("pallas_call", "xla_pmap", "xla_call"):
+        for tag, sub in subjaxprs(eqn):
+            _walk(sub, visit, None, path=f"{here}.{tag}", depth=depth + 1,
+                  in_pallas=True if prim == "pallas_call" else in_pallas)
+        return [NONE] * n_out
+
+    # --- leaf transfer rules ---
+    if prim in _ORIGIN_BOTH:
+        return [BOTH] * n_out
+    if prim == "max":
+        return [_intersect(ins) | {"lo"}] * n_out
+    if prim == "min":
+        return [_intersect(ins) | {"hi"}] * n_out
+    if prim == "abs":
+        return [_intersect(ins) | {"lo"}] * n_out
+    if prim == "neg":
+        g = ins[0] if ins else NONE
+        flipped = set()
+        if "lo" in g:
+            flipped.add("hi")
+        if "hi" in g:
+            flipped.add("lo")
+        return [frozenset(flipped)] * n_out
+    if prim in _PASSTHROUGH:
+        return [ins[0] if ins else NONE] * n_out
+    if prim in _INTERSECT:
+        return [_intersect(ins)] * n_out
+    if prim == "select_n":
+        return [_intersect(ins[1:])] * n_out
+    if prim in ("gather", "dynamic_slice"):
+        return [ins[0] if ins else NONE] * n_out
+    if prim == "sort":
+        # outputs are permutations of the respective operands
+        return [ins[i] if i < len(ins) else NONE for i in range(n_out)]
+    return [NONE] * n_out
+
+
+# ---------------------------------------------------------------------------
+# helpers the passes share
+# ---------------------------------------------------------------------------
+
+def gather_mode_is_fill(eqn) -> bool:
+    mode = eqn.params.get("mode")
+    return mode is not None and "FILL_OR_DROP" in str(mode)
+
+
+def eqn_out_dtypes(eqn):
+    return [getattr(v.aval, "dtype", None) for v in eqn.outvars]
+
+
+def eqn_in_dtypes(eqn):
+    out = []
+    for v in eqn.invars:
+        aval = v.aval if not isinstance(v, Literal) else None
+        if aval is None:
+            out.append(np.asarray(v.val).dtype if hasattr(v, "val") else None)
+        else:
+            out.append(getattr(aval, "dtype", None))
+    return out
+
+
+def has_wide_output(eqn) -> bool:
+    return any(d is not None and _is_wide(d) for d in eqn_out_dtypes(eqn))
+
+
+def has_wide_input(eqn) -> bool:
+    return any(d is not None and _is_wide(d) for d in eqn_in_dtypes(eqn))
+
+
+def is_wide_dtype(dtype) -> bool:
+    return _is_wide(dtype)

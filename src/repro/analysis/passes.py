@@ -1,0 +1,406 @@
+"""The four pass families (DESIGN.md §11).
+
+Every pass consumes a :class:`PassContext` (the analyzed universe built by
+``registry.build_universe``) and returns a :class:`report.PassResult`.
+Nothing here executes pipeline code: executors are inspected through
+``jax.make_jaxpr`` / ``jax.eval_shape`` traces, kernels through their
+registered static plans.
+
+  dispatch   — host-sync / dispatch-discipline hazards in executor jaxprs
+  precision  — int8/int4 domain discipline in quant + codec subgraphs
+  kernel     — Pallas BlockSpec divisibility, VMEM budget, ref signatures
+  cut        — offload payload schema coverage + byte-accounting soundness
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.analysis import jaxpr_utils as ju
+from repro.analysis.report import Finding, PassResult
+from repro.analysis.spec import VMEM_BUDGET_BYTES, signature_mismatches
+
+
+@dataclasses.dataclass
+class PassContext:
+    targets: list           # list[registry.ExecutorTarget]
+    cut_families: list      # list[registry.CutFamily]
+    kernel_specs: list      # list[spec.KernelAnalysisSpec]
+    kernel_missing: list    # kernel package names without an ANALYSIS hook
+    kernel_shapes: dict     # configs.shapes.KERNEL_SHAPES
+    vmem_budget: int = VMEM_BUDGET_BYTES
+
+
+def _trace(target):
+    import jax
+
+    return jax.make_jaxpr(target.fn)(*target.args)
+
+
+_NARROW_INTS = ("int8", "int4", "uint8", "uint4")
+_CALLBACK_PRIMS = ("debug_callback", "io_callback", "pure_callback")
+
+
+def _is_narrow_int(dtype) -> bool:
+    return dtype is not None and str(dtype) in _NARROW_INTS
+
+
+def _is_float(dtype) -> bool:
+    return dtype is not None and np.issubdtype(np.dtype(str(dtype)),
+                                               np.floating)
+
+
+def _is_int(dtype) -> bool:
+    return dtype is not None and np.issubdtype(np.dtype(str(dtype)),
+                                               np.integer)
+
+
+def _unspecified_sharding(s) -> bool:
+    return s is None or "Unspecified" in type(s).__name__
+
+
+# ---------------------------------------------------------------------------
+# 1. dispatch lint
+# ---------------------------------------------------------------------------
+
+class DispatchPass:
+    family = "dispatch"
+
+    def run(self, ctx: PassContext) -> PassResult:
+        findings, subjects = [], []
+        for tgt in ctx.targets:
+            subjects.append(tgt.name)
+            closed = _trace(tgt)
+            findings.extend(self._lint(tgt.name, closed))
+        return PassResult(self.family, subjects, findings)
+
+    def _lint(self, name, closed):
+        out = []
+
+        def fnd(code, where, msg, severity="error"):
+            out.append(Finding("dispatch", code, name, where, msg, severity))
+
+        def visit(site):
+            eqn, prim = site.eqn, site.eqn.primitive.name
+            if prim in ("xla_pmap", "pmap"):
+                fnd("D001", site.path,
+                    "nested pmap inside a traced executor: per-call device "
+                    "transfer + separate dispatch per map")
+            if prim == "sharding_constraint":
+                fnd("D002", site.path,
+                    "sharding constraint baked into an executor jaxpr: "
+                    "re-jitting under a different mesh will miscompile",
+                    severity="warning")
+            if prim == "pjit":
+                shardings = list(eqn.params.get("in_shardings", ())) + \
+                    list(eqn.params.get("out_shardings", ()))
+                if any(not _unspecified_sharding(s) for s in shardings):
+                    fnd("D002", site.path,
+                        "inner jit with explicit shardings leaks placement "
+                        "into the executor graph", severity="warning")
+            if prim in _CALLBACK_PRIMS:
+                fnd("D003", site.path,
+                    f"{prim} forces a host sync inside the dispatch "
+                    "(breaks the single-dispatch contract)")
+            if ju.has_wide_output(eqn) and not ju.has_wide_input(eqn):
+                fnd("D004", site.path,
+                    "implicit 64-bit promotion point (x64 leak): "
+                    "doubles wire/VMEM cost and diverges across platforms")
+            if prim == "gather" and not site.in_pallas \
+                    and not ju.gather_mode_is_fill(eqn):
+                idx_guards = site.in_guards[1] if len(site.in_guards) > 1 \
+                    else ju.NONE
+                if idx_guards != ju.BOTH:
+                    fnd("D005", site.path,
+                        "non-fill gather with unguarded indices: "
+                        "out-of-bounds reads are backend-defined "
+                        "(clamp both sides or use mode='fill')")
+            if prim in ("scatter", "scatter-add", "scatter_add") \
+                    and not site.in_pallas \
+                    and not ju.gather_mode_is_fill(eqn):
+                idx_guards = site.in_guards[1] if len(site.in_guards) > 1 \
+                    else ju.NONE
+                if idx_guards != ju.BOTH:
+                    fnd("D005", site.path,
+                        "non-fill scatter with unguarded indices")
+            if prim == "convert_element_type":
+                in_dt = ju.eqn_in_dtypes(eqn)[0] if eqn.invars else None
+                out_dt = ju.eqn_out_dtypes(eqn)[0]
+                if _is_float(in_dt) and _is_int(out_dt) \
+                        and not _is_narrow_int(out_dt) \
+                        and site.in_guards \
+                        and site.in_guards[0] != ju.BOTH:
+                    fnd("D006", site.path,
+                        f"unclamped float->{out_dt} cast: NaN/inf casts are "
+                        "backend-defined; clamp in float before the cast")
+
+        ju.walk(closed, visit)
+        for i, var in enumerate(closed.jaxpr.outvars):
+            shape = getattr(var.aval, "shape", ())
+            if any(not isinstance(d, (int, np.integer)) for d in shape):
+                out.append(Finding(
+                    "dispatch", "D007", name, f"out[{i}]",
+                    f"dynamic output dim {shape}: breaks the capacity-"
+                    "padding contract (DESIGN.md §9)"))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# 2. precision-domain lint
+# ---------------------------------------------------------------------------
+
+class PrecisionPass:
+    family = "precision"
+
+    def run(self, ctx: PassContext) -> PassResult:
+        findings, subjects = [], []
+        for tgt in ctx.targets:
+            subjects.append(tgt.name)
+            closed = _trace(tgt)
+            findings.extend(self._lint(tgt.name, closed))
+            findings.extend(self._lut_spec(tgt))
+        return PassResult(self.family, subjects, findings)
+
+    def _lint(self, name, closed):
+        out = []
+        sites = []
+        ju.walk(closed, sites.append)
+
+        # consumer index: var -> list of sites using it (same-level links)
+        consumers = {}
+        for site in sites:
+            for v in site.eqn.invars:
+                if not isinstance(v, ju.Literal):
+                    consumers.setdefault(id(v), []).append(site)
+
+        for site in sites:
+            eqn, prim = site.eqn, site.eqn.primitive.name
+            if prim == "convert_element_type":
+                in_dt = ju.eqn_in_dtypes(eqn)[0] if eqn.invars else None
+                out_dt = ju.eqn_out_dtypes(eqn)[0]
+                if _is_narrow_int(in_dt) and _is_float(out_dt):
+                    cons = consumers.get(id(eqn.outvars[0]), [])
+                    scaled = any(
+                        c.eqn.primitive.name in ("mul", "div", "dot_general")
+                        for c in cons)
+                    if cons and not scaled:
+                        out.append(Finding(
+                            "precision", "P001", name, site.path,
+                            f"{in_dt} value dequantized to {out_dt} without "
+                            "a scale multiply: float ops on the quantized "
+                            "domain outside a sanctioned dequant point"))
+                if _is_float(in_dt) and _is_narrow_int(out_dt) \
+                        and site.in_guards \
+                        and site.in_guards[0] != ju.BOTH:
+                    out.append(Finding(
+                        "precision", "P002", name, site.path,
+                        f"float->{out_dt} quantization cast without a "
+                        "clip: values outside the narrow range wrap"))
+            if prim == "dot_general":
+                in_dts = ju.eqn_in_dtypes(eqn)
+                if len(in_dts) >= 2 and _is_narrow_int(in_dts[0]) \
+                        and _is_narrow_int(in_dts[1]):
+                    pref = eqn.params.get("preferred_element_type")
+                    if pref is None or "int32" not in str(np.dtype(pref)):
+                        out.append(Finding(
+                            "precision", "P004", name, site.path,
+                            "int8 matmul without preferred_element_type="
+                            "int32: accumulates in the narrow domain"))
+        return out
+
+    def _lut_spec(self, tgt):
+        from repro.camera.face_nn import make_sigmoid_lut
+
+        out = []
+        for i, (lut, meta) in enumerate(tgt.lut_pairs):
+            lo, hi, entries = meta
+            rebuilt, _ = make_sigmoid_lut(entries=int(entries), lo=float(lo),
+                                          hi=float(hi))
+            lut_np = np.asarray(lut)
+            if lut_np.shape != rebuilt.shape \
+                    or not np.array_equal(lut_np, np.asarray(rebuilt)):
+                out.append(Finding(
+                    "precision", "P003", tgt.name, f"lut[{i}]",
+                    f"sigmoid LUT does not match its threaded meta "
+                    f"(lo={lo}, hi={hi}, entries={entries}): kernel-side "
+                    "indexing will drift from face_nn.sigmoid_lut"))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# 3. Pallas kernel legality
+# ---------------------------------------------------------------------------
+
+class KernelPass:
+    family = "kernel"
+
+    def run(self, ctx: PassContext) -> PassResult:
+        findings, subjects = [], []
+        for name in ctx.kernel_missing:
+            findings.append(Finding(
+                "kernel", "K005", name, "package",
+                "kernel package has no ANALYSIS registration hook"))
+        for spec in ctx.kernel_specs:
+            subjects.append(spec.name)
+            for j, pair in enumerate(spec.pairs):
+                for msg in signature_mismatches(pair):
+                    findings.append(Finding(
+                        "kernel", "K003", spec.name, f"pair[{j}]",
+                        f"kernel/ref signature drift: {msg}"))
+            cases = ctx.kernel_shapes.get(spec.name)
+            if not cases:
+                findings.append(Finding(
+                    "kernel", "K004", spec.name, "shapes",
+                    "no shape cases registered in configs.shapes."
+                    "KERNEL_SHAPES"))
+                continue
+            for case in cases:
+                plan = spec.plan(case)
+                for chk in plan.checks:
+                    if not chk.ok:
+                        findings.append(Finding(
+                            "kernel", "K001", spec.name,
+                            f"{plan.case}:{chk.label}",
+                            f"BlockSpec divisibility violated: {chk.label} "
+                            f"with size={chk.size}, block={chk.block}"))
+                if plan.vmem_bytes > ctx.vmem_budget:
+                    findings.append(Finding(
+                        "kernel", "K002", spec.name, f"{plan.case}:vmem",
+                        f"per-block VMEM footprint {plan.vmem_bytes} B "
+                        f"exceeds budget {ctx.vmem_budget} B"))
+        return PassResult(self.family, subjects, findings)
+
+
+# ---------------------------------------------------------------------------
+# 4. cut-soundness lint
+# ---------------------------------------------------------------------------
+
+class CutPass:
+    family = "cut"
+
+    def run(self, ctx: PassContext) -> PassResult:
+        import jax
+
+        from repro.camera.offload.payloads import static_array_bytes
+        from repro.kernels.wire_codec.ops import BLOCK, wire_bytes
+
+        findings, subjects = [], []
+        for fam in ctx.cut_families:
+            cuts = tuple(fam.executor_cls.CUTS)
+            schema_tbl = fam.executor_cls.PAYLOAD_SCHEMA
+            extra_cuts = [c for c in cuts if c not in fam.template_blocks]
+            for c in extra_cuts:
+                findings.append(Finding(
+                    "cut", "C004", fam.name, c,
+                    f"cut {c!r} has no matching block in the analytic "
+                    f"pipeline template {fam.template_blocks}: "
+                    "placement solver and runtime disagree on legal cuts"))
+            for c in [c for c in schema_tbl if c not in cuts]:
+                findings.append(Finding(
+                    "cut", "C004", fam.name, c,
+                    f"schema declares unknown cut {c!r}"))
+
+            raw_avals = {}
+            for cut in cuts:
+                subjects.append(f"{fam.name}[{cut}]")
+                schema = schema_tbl.get(cut)
+                if schema is None:
+                    findings.append(Finding(
+                        "cut", "C002", fam.name, cut,
+                        "cut has no PayloadSchema declaration"))
+                    continue
+                ex_raw = fam.make(cut, None)
+                arrays_raw, _ = jax.eval_shape(ex_raw._node_fn,
+                                               *fam.node_args(ex_raw))
+                raw_avals[cut] = arrays_raw
+                for bits in (None, 8):
+                    subj = f"{fam.name}[{cut},{bits or 'raw'}]"
+                    if bits is None:
+                        avals = arrays_raw
+                    else:
+                        ex = fam.make(cut, bits)
+                        avals, _ = jax.eval_shape(ex._node_fn,
+                                                  *fam.node_args(ex))
+                    declared = schema.declared(bits)
+                    for f in sorted(set(avals) - declared):
+                        findings.append(Finding(
+                            "cut", "C001", subj, f,
+                            f"node half ships undeclared array {f!r} "
+                            f"{tuple(avals[f].shape)}: uncharged bytes on "
+                            "the wire"))
+                    for f in sorted(declared - set(avals)):
+                        findings.append(Finding(
+                            "cut", "C002", subj, f,
+                            f"declared payload field {f!r} missing from "
+                            "node-half output"))
+                    for f in schema.codec:
+                        if f not in arrays_raw or f not in avals:
+                            continue
+                        n = int(np.prod(arrays_raw[f].shape))
+                        if bits is None:
+                            cap = static_array_bytes(arrays_raw[f])
+                            ana = wire_bytes(n, None)
+                            if str(arrays_raw[f].dtype) != "float32":
+                                findings.append(Finding(
+                                    "cut", "C005", subj, f,
+                                    f"raw codec field {f!r} is "
+                                    f"{arrays_raw[f].dtype}, expected "
+                                    "float32"))
+                        else:
+                            packed = avals[f]
+                            scales = avals.get(f + "_scales")
+                            nb = -(-n // BLOCK)
+                            if tuple(packed.shape) != (nb, BLOCK * bits // 8) \
+                                    or scales is None \
+                                    or tuple(scales.shape) != (nb, 1):
+                                findings.append(Finding(
+                                    "cut", "C003", subj, f,
+                                    f"packed field {f!r} shape "
+                                    f"{tuple(packed.shape)} does not match "
+                                    f"codec layout for {n} logical values "
+                                    f"(expect ({nb}, {BLOCK * bits // 8}) + "
+                                    f"({nb}, 1) scales)"))
+                                continue
+                            cap = static_array_bytes(packed) \
+                                + static_array_bytes(scales)
+                            ana = wire_bytes(nb * BLOCK, bits)
+                        if abs(cap - ana) > 1e-6:
+                            findings.append(Finding(
+                                "cut", "C003", subj, f,
+                                f"byte accounting drift on {f!r}: payload "
+                                f"capacity {cap} B vs analytic full-"
+                                f"occupancy wire_bytes {ana} B"))
+                    for f in schema.i32:
+                        if f in avals and str(avals[f].dtype) != "int32":
+                            findings.append(Finding(
+                                "cut", "C005", subj, f,
+                                f"sideband field {f!r} is {avals[f].dtype} "
+                                "but charged at 4 B/entry (int32)"))
+                    for f in schema.bools:
+                        if f in avals and str(avals[f].dtype) != "bool":
+                            findings.append(Finding(
+                                "cut", "C005", subj, f,
+                                f"sideband field {f!r} is {avals[f].dtype} "
+                                "but charged bit-packed (bool)"))
+        return PassResult(self.family, subjects, findings)
+
+
+PASSES = {
+    "dispatch": DispatchPass,
+    "precision": PrecisionPass,
+    "kernel": KernelPass,
+    "cut": CutPass,
+}
+
+
+def run_passes(ctx: PassContext, only=None):
+    from repro.analysis.report import AnalysisReport
+
+    results = []
+    for fam, cls in PASSES.items():
+        if only and fam not in only:
+            continue
+        results.append(cls().run(ctx))
+    return AnalysisReport(results)

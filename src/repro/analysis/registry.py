@@ -1,0 +1,213 @@
+"""Builds the analyzed universe (DESIGN.md §11).
+
+Small deterministic instances of every registered executor — the fused
+§III funnel, the §IV rig, and both offload families' node/cloud halves at
+every legal cut — plus the kernel ANALYSIS hooks.  Construction trains the
+toy detector/NN once per process (cached); analysis itself never runs the
+pipelines, it only traces them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import importlib
+import pkgutil
+
+
+@dataclasses.dataclass
+class ExecutorTarget:
+    """One traceable unit for the jaxpr passes."""
+
+    name: str
+    fn: object               # callable to jax.make_jaxpr
+    args: tuple              # concrete example arrays / avals
+    lut_pairs: tuple = ()    # ((lut, meta), ...) for the P003 spec check
+
+
+@dataclasses.dataclass
+class CutFamily:
+    """One offload executor family for the cut-soundness pass."""
+
+    name: str
+    executor_cls: type
+    make: object             # (cut, bits) -> offload executor
+    node_args: object        # (offload_ex) -> node-half example args
+    template_blocks: tuple   # analytic pipeline block names
+
+
+@functools.lru_cache(maxsize=None)
+def _fa_base():
+    import jax.numpy as jnp
+
+    from repro.camera.face_nn import train_face_nn
+    from repro.camera.pipelines import FaceAuthExecutor
+    from repro.camera.synthetic import face_dataset, security_video
+    from repro.camera.viola_jones import make_feature_pool, train_cascade
+
+    frames, _ = security_video(n_frames=10, motion_frames=5, seed=1)
+    X, y, _ = face_dataset(n_per_class=80, seed=3)
+    casc = train_cascade(X, y, make_feature_pool(n=60), n_stages=2,
+                         per_stage=6, seed=0)
+    nn = train_face_nn(X, y, steps=60)
+    ex = FaceAuthExecutor(casc, nn, frames.shape[1], frames.shape[2],
+                          scale_factor=1.6, step=8.0, adaptive=False)
+    ex.calibrate(frames)
+    return ex, jnp.asarray(frames)
+
+
+@functools.lru_cache(maxsize=None)
+def _vr_base():
+    import numpy as np
+    import jax.numpy as jnp
+
+    from repro.camera.bssa import GridSpec
+    from repro.camera.pipelines import VRRigExecutor
+    from repro.camera.synthetic import stereo_pair
+
+    pairs = [stereo_pair(h=48, w=64, max_disp=6, seed=s) for s in (2, 3)]
+    lefts = jnp.asarray(np.stack([p[0] for p in pairs]))
+    rights = jnp.asarray(np.stack([p[1] for p in pairs]))
+    ex = VRRigExecutor(GridSpec(sigma_spatial=8), max_disp=6, n_iters=2,
+                       rig_parallel=False)
+    return ex, lefts, rights
+
+
+def _zeros_like_avals(avals):
+    import jax
+    import jax.numpy as jnp
+
+    return jax.tree_util.tree_map(
+        lambda a: jnp.zeros(a.shape, a.dtype), avals)
+
+
+def build_targets():
+    """Every traceable executor unit for the dispatch/precision passes."""
+    import functools as ft
+
+    import jax
+
+    from repro.camera.offload.executors import (FaceAuthOffloadExecutor,
+                                                VROffloadExecutor)
+    from repro.kernels.quant_matmul.ops import nn_forward_quantized
+    from repro.kernels.wire_codec.ops import wire_roundtrip
+
+    targets = []
+    fa, frames = _fa_base()
+    targets.append(ExecutorTarget(
+        "face_auth.funnel", fa._funnel, (frames,) + tuple(fa._consts),
+        lut_pairs=((fa.lut, fa.lut_meta),)))
+
+    vr, lefts, rights = _vr_base()
+    targets.append(ExecutorTarget(
+        "vr_rig.depth", jax.vmap(vr.pair_depth), (lefts, rights)))
+    import jax.numpy as jnp
+    depths0 = jnp.zeros(lefts.shape, jnp.float32)
+    targets.append(ExecutorTarget(
+        "vr_rig.panorama", vr.pano_fn, (lefts, rights, depths0)))
+
+    for cut in FaceAuthOffloadExecutor.CUTS:
+        for bits in (None, 8):
+            off = FaceAuthOffloadExecutor(fa, cut, bits=bits,
+                                          use_pallas=False)
+            tag = f"fa_offload[{cut},{bits or 'raw'}]"
+            node_args = (frames,) + tuple(off._consts)
+            targets.append(ExecutorTarget(
+                f"{tag}.node", off._node_fn, node_args,
+                lut_pairs=((fa.lut, fa.lut_meta),)))
+            avals, _ = jax.eval_shape(off._node_fn, *node_args)
+            cloud = ft.partial(off._cloud_fn,
+                               frames_shape=tuple(frames.shape))
+            targets.append(ExecutorTarget(
+                f"{tag}.cloud", cloud,
+                (_zeros_like_avals(avals),) + tuple(off._consts),
+                lut_pairs=((fa.lut, fa.lut_meta),)))
+
+    for cut in VROffloadExecutor.CUTS:
+        for bits in (None, 8):
+            off = VROffloadExecutor(vr, cut, bits=bits, use_pallas=False)
+            tag = f"vr_offload[{cut},{bits or 'raw'}]"
+            targets.append(ExecutorTarget(
+                f"{tag}.node", off._node_fn, (lefts, rights)))
+            avals, _ = jax.eval_shape(off._node_fn, lefts, rights)
+            pano_shapes = None
+            if cut == "stitch":
+                lp, rp = jax.eval_shape(
+                    lambda l, r: off._pano(l, r, off._depth(l, r)),
+                    lefts, rights)
+                pano_shapes = (tuple(lp.shape), tuple(rp.shape))
+            cloud = off._cloud_fn_for((tuple(lefts.shape), pano_shapes))
+            targets.append(ExecutorTarget(
+                f"{tag}.cloud", cloud, (_zeros_like_avals(avals),)))
+
+    # dedicated precision subgraphs: the quantized NN tail + the codec
+    qnn, lut, meta = fa.qnn, fa.lut, fa.lut_meta
+    X8 = jnp.zeros((8, qnn.w1_q.shape[0]), jnp.float32)
+    targets.append(ExecutorTarget(
+        "quant.nn_forward",
+        lambda x: nn_forward_quantized(qnn, x, lut, meta, use_pallas=False),
+        (X8,), lut_pairs=((lut, meta),)))
+    for bits in (4, 8):
+        x = jnp.zeros((3, 300), jnp.float32)
+        targets.append(ExecutorTarget(
+            f"codec.roundtrip[b{bits}]",
+            ft.partial(wire_roundtrip, bits=bits, use_pallas=False), (x,)))
+    return targets
+
+
+def build_cut_families():
+    from repro.camera.offload.executors import (FaceAuthOffloadExecutor,
+                                                VROffloadExecutor)
+    from repro.camera.pipelines import (FAWorkloadStats, VRWorkloadStats,
+                                        fa_pipeline, vr_pipeline)
+
+    fa, frames = _fa_base()
+    vr, lefts, rights = _vr_base()
+    fa_blocks = tuple(b.name for b in fa_pipeline(FAWorkloadStats()).blocks)
+    vr_blocks = tuple(b.name for b in vr_pipeline(VRWorkloadStats()).blocks)
+    return [
+        CutFamily(
+            name="face_auth", executor_cls=FaceAuthOffloadExecutor,
+            make=lambda cut, bits: FaceAuthOffloadExecutor(
+                fa, cut, bits=bits, use_pallas=False),
+            node_args=lambda off: (frames,) + tuple(off._consts),
+            template_blocks=fa_blocks),
+        CutFamily(
+            name="vr_video", executor_cls=VROffloadExecutor,
+            make=lambda cut, bits: VROffloadExecutor(
+                vr, cut, bits=bits, use_pallas=False),
+            node_args=lambda off: (lefts, rights),
+            template_blocks=vr_blocks),
+    ]
+
+
+def build_kernel_specs():
+    """Import every kernels/* package and collect its ANALYSIS hook."""
+    import repro.kernels as kernels_pkg
+
+    specs, missing = [], []
+    for info in sorted(pkgutil.iter_modules(kernels_pkg.__path__),
+                       key=lambda m: m.name):
+        if not info.ispkg:
+            continue
+        mod = importlib.import_module(f"repro.kernels.{info.name}")
+        hook = getattr(mod, "ANALYSIS", None)
+        if hook is None:
+            missing.append(info.name)
+        else:
+            specs.append(hook)
+    return specs, missing
+
+
+def build_context():
+    from repro.analysis.passes import PassContext
+    from repro.configs.shapes import KERNEL_SHAPES
+
+    specs, missing = build_kernel_specs()
+    return PassContext(
+        targets=build_targets(),
+        cut_families=build_cut_families(),
+        kernel_specs=specs,
+        kernel_missing=missing,
+        kernel_shapes=KERNEL_SHAPES,
+    )

@@ -1,0 +1,140 @@
+"""Findings, reports, and the baseline workflow (DESIGN.md §11).
+
+A *finding* is one violation of a statically checkable contract, keyed by a
+stable fingerprint (family|code|subject|where).  The checked-in
+``analysis/baseline.json`` holds the fingerprints of findings the repo has
+explicitly accepted; tier-1 fails on anything NOT in the baseline, so a new
+violation can land only by editing the baseline in the same diff — which is
+exactly the review surface we want.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+from typing import Iterable
+
+
+FAMILIES = ("dispatch", "precision", "kernel", "cut")
+
+DEFAULT_BASELINE_PATH = os.path.join(os.path.dirname(__file__),
+                                     "baseline.json")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One contract violation, locatable and fingerprint-stable."""
+
+    family: str    # one of FAMILIES
+    code: str      # short id, e.g. "D004" — stable across sessions
+    subject: str   # analyzed unit: executor target, kernel, or cut name
+    where: str     # stable location inside the subject (eqn path, field, ...)
+    message: str   # human-readable description; NOT part of the fingerprint
+    severity: str = "error"
+
+    @property
+    def fingerprint(self) -> str:
+        key = "|".join((self.family, self.code, self.subject, self.where))
+        return hashlib.sha256(key.encode()).hexdigest()[:16]
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["fingerprint"] = self.fingerprint
+        return d
+
+    def __str__(self) -> str:
+        return (f"[{self.code}/{self.severity}] {self.subject} @ {self.where}"
+                f": {self.message}")
+
+
+@dataclasses.dataclass
+class PassResult:
+    """Outcome of one pass family over every subject it analyzed."""
+
+    family: str
+    subjects: list          # names of analyzed units (even if clean)
+    findings: list          # list[Finding]
+
+
+@dataclasses.dataclass
+class AnalysisReport:
+    results: list           # list[PassResult]
+
+    @property
+    def findings(self):
+        return [f for r in self.results for f in r.findings]
+
+    @property
+    def subjects(self):
+        return {r.family: list(r.subjects) for r in self.results}
+
+    def new_findings(self, baseline: "Baseline | None"):
+        """Findings whose fingerprint is not baselined (all, if strict)."""
+        if baseline is None:
+            return list(self.findings)
+        return [f for f in self.findings
+                if f.fingerprint not in baseline.fingerprints]
+
+    def to_dict(self, baseline: "Baseline | None" = None) -> dict:
+        new = self.new_findings(baseline)
+        return {
+            "schema": "repro.analysis/v1",
+            "families": {
+                r.family: {
+                    "subjects": list(r.subjects),
+                    "findings": [f.to_dict() for f in r.findings],
+                }
+                for r in self.results
+            },
+            "totals": {
+                "subjects": sum(len(r.subjects) for r in self.results),
+                "findings": len(self.findings),
+                "baselined": len(self.findings) - len(new),
+                "non_baselined": len(new),
+            },
+        }
+
+    def summary_lines(self, baseline: "Baseline | None" = None):
+        lines = []
+        for r in self.results:
+            lines.append(f"{r.family}: {len(r.subjects)} subjects, "
+                         f"{len(r.findings)} findings")
+        new = self.new_findings(baseline)
+        lines.append(f"total findings: {len(self.findings)} "
+                     f"({len(new)} not baselined)")
+        return lines
+
+
+class Baseline:
+    """Accepted-finding fingerprints, persisted as JSON."""
+
+    def __init__(self, entries: Iterable[dict] = ()):
+        self.entries = list(entries)
+        self.fingerprints = {e["fingerprint"] for e in self.entries}
+
+    @classmethod
+    def load(cls, path: str = DEFAULT_BASELINE_PATH) -> "Baseline":
+        if not os.path.exists(path):
+            return cls()
+        with open(path) as fh:
+            data = json.load(fh)
+        return cls(data.get("accepted", []))
+
+    @classmethod
+    def from_report(cls, report: AnalysisReport) -> "Baseline":
+        return cls([
+            {"fingerprint": f.fingerprint, "family": f.family,
+             "code": f.code, "subject": f.subject, "where": f.where,
+             "message": f.message}
+            for f in report.findings
+        ])
+
+    def save(self, path: str = DEFAULT_BASELINE_PATH) -> None:
+        entries = sorted(self.entries, key=lambda e: (
+            e["family"], e["code"], e["subject"], e["where"]))
+        with open(path, "w") as fh:
+            json.dump({"schema": "repro.analysis.baseline/v1",
+                       "accepted": entries}, fh, indent=2, sort_keys=True)
+            fh.write("\n")

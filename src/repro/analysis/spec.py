@@ -1,0 +1,127 @@
+"""Kernel registration hooks for the static legality pass (DESIGN.md §11).
+
+Each ``kernels/<pkg>/__init__.py`` exports an ``ANALYSIS`` spec: which
+callables form the kernel/ref pair, which keyword args are tuning knobs the
+ref legitimately lacks, and a ``plan`` that — given one shape case from
+``configs.shapes.KERNEL_SHAPES`` — statically reproduces the block-size
+choices the entry point would make and returns the VMEM-resident tiles plus
+the divisibility constraints the kernel asserts at trace time.  The pass
+then re-checks those constraints and the per-block VMEM footprint without
+tracing or running anything.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import inspect
+import math
+from typing import Callable
+
+import numpy as np
+
+
+VMEM_BUDGET_BYTES = 16 * 1024 * 1024   # per-core VMEM (pallas guide)
+
+
+@dataclasses.dataclass(frozen=True)
+class Tile:
+    """One VMEM-resident block (input/output block or scratch)."""
+
+    label: str
+    shape: tuple
+    dtype: str = "float32"
+
+    @property
+    def nbytes(self) -> int:
+        return int(math.prod(self.shape)) * np.dtype(self.dtype).itemsize
+
+
+@dataclasses.dataclass(frozen=True)
+class DivCheck:
+    """`size % block == 0` constraint the kernel asserts at trace time."""
+
+    label: str
+    size: int
+    block: int
+
+    @property
+    def ok(self) -> bool:
+        return self.block > 0 and self.size % self.block == 0
+
+
+@dataclasses.dataclass
+class KernelPlan:
+    """Static tiling plan for one (kernel, shape-case) pair."""
+
+    case: str
+    grid: tuple
+    tiles: list          # list[Tile]
+    checks: list         # list[DivCheck]
+
+    @property
+    def vmem_bytes(self) -> int:
+        return sum(t.nbytes for t in self.tiles)
+
+
+@dataclasses.dataclass(frozen=True)
+class FnPair:
+    """A pallas entry point and the pure-jnp ref it must mirror."""
+
+    kernel_fn: Callable
+    ref_fn: Callable
+    tuning_kwargs: frozenset = frozenset()
+
+
+@dataclasses.dataclass
+class KernelAnalysisSpec:
+    name: str
+    pairs: list                      # list[FnPair]
+    plan: Callable                   # (case: dict) -> KernelPlan
+
+
+def adapt_block(size: int, block: int) -> int:
+    """The entry-point convention: shrink the block to the largest divisor
+    of ``size`` that is <= the requested block (see ops.py wrappers)."""
+    b = min(block, size)
+    while b > 1 and size % b:
+        b -= 1
+    return max(b, 1)
+
+
+def round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def signature_mismatches(pair: FnPair):
+    """Static kernel-vs-ref signature check.
+
+    Positional parameters must match by name and order; the kernel's extra
+    keyword-only parameters must all be declared tuning knobs.  Returns a
+    list of human-readable mismatch strings (empty == compatible).
+    """
+    out = []
+    ksig = inspect.signature(pair.kernel_fn)
+    rsig = inspect.signature(pair.ref_fn)
+
+    def split(sig):
+        pos, kw = [], []
+        for p in sig.parameters.values():
+            if p.kind in (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD):
+                pos.append(p.name)
+            elif p.kind == p.KEYWORD_ONLY:
+                kw.append(p.name)
+        return pos, kw
+
+    kpos, kkw = split(ksig)
+    rpos, rkw = split(rsig)
+    if kpos != rpos:
+        out.append(f"positional args differ: kernel{tuple(kpos)} "
+                   f"vs ref{tuple(rpos)}")
+    extra = set(kkw) - set(rkw) - set(pair.tuning_kwargs)
+    if extra:
+        out.append(f"kernel-only kwargs not declared as tuning knobs: "
+                   f"{sorted(extra)}")
+    missing = set(rkw) - set(kkw)
+    if missing:
+        out.append(f"ref kwargs missing from kernel: {sorted(missing)}")
+    return out

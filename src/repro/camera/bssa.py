@@ -72,7 +72,9 @@ def rough_disparity(left: jax.Array, right: jax.Array, max_disp: int = 16,
     def sad_chunk(ds):
         # shifted right views as one gather: rs[d, y, x] = right[y, max(x-d, 0)]
         # (edge columns replicate, matching the seed's roll + first-column fill)
-        xs = jnp.maximum(jnp.arange(w)[None, :] - ds[:, None], 0)
+        # two-sided clip (d >= 0 makes the upper bound vacuous, but the
+        # gather below is PROMISE_IN_BOUNDS — guard both sides statically)
+        xs = jnp.clip(jnp.arange(w)[None, :] - ds[:, None], 0, w - 1)
         rstack = jnp.moveaxis(right[:, xs], 1, 0)          # (chunk, h, w)
         diff = jnp.abs(left[None] - rstack)
         dp = jnp.pad(diff, ((0, 0), (pad, pad), (pad, pad)), mode="edge")
@@ -157,9 +159,11 @@ def splat(img: jax.Array, values: jax.Array, spec: GridSpec):
     h, w = img.shape
     gy, gx, gr = spec.dims(h, w)
     cy, cx, cr = _grid_coords(img, spec)
-    iy = jnp.clip(jnp.round(cy).astype(jnp.int32), 0, gy - 1)
-    ix = jnp.clip(jnp.round(cx).astype(jnp.int32), 0, gx - 1)
-    ir = jnp.clip(jnp.round(cr).astype(jnp.int32), 0, gr - 1)
+    # clip in float, then cast: same vertices for finite inputs, but a NaN
+    # intensity no longer hits a backend-defined float->int cast
+    iy = jnp.clip(jnp.round(cy), 0, gy - 1).astype(jnp.int32)
+    ix = jnp.clip(jnp.round(cx), 0, gx - 1).astype(jnp.int32)
+    ir = jnp.clip(jnp.round(cr), 0, gr - 1).astype(jnp.int32)
     flat = (iy * gx + ix) * gr + ir
     v = jnp.zeros((gy * gx * gr,), jnp.float32).at[flat].add(values.reshape(-1))
     wt = jnp.zeros((gy * gx * gr,), jnp.float32).at[flat].add(1.0)
@@ -212,9 +216,11 @@ def slice_grid(grid_val: jax.Array, grid_wt: jax.Array, img: jax.Array,
     gy, gx, gr = grid_val.shape
     cy, cx, cr = _grid_coords(img, spec)
 
-    y0 = jnp.clip(jnp.floor(cy).astype(jnp.int32), 0, gy - 2)
-    x0 = jnp.clip(jnp.floor(cx).astype(jnp.int32), 0, gx - 2)
-    r0 = jnp.clip(jnp.floor(cr).astype(jnp.int32), 0, gr - 2)
+    # clip in float, then cast (see splat): keeps the trilinear corner
+    # indices in-bounds even for non-finite pixel values
+    y0 = jnp.clip(jnp.floor(cy), 0, gy - 2).astype(jnp.int32)
+    x0 = jnp.clip(jnp.floor(cx), 0, gx - 2).astype(jnp.int32)
+    r0 = jnp.clip(jnp.floor(cr), 0, gr - 2).astype(jnp.int32)
     fy, fx, fr = cy - y0, cx - x0, cr - r0
     fy = jnp.clip(fy, 0, 1)
     fx = jnp.clip(fx, 0, 1)

@@ -67,8 +67,11 @@ def make_sigmoid_lut(entries: int = 256, lo: float = -8.0, hi: float = 8.0):
 
 def sigmoid_lut(x, lut, meta):
     lo, hi, entries = meta
-    idx = jnp.clip(((x - lo) / (hi - lo) * (entries - 1)).astype(jnp.int32),
-                   0, entries - 1)
+    # clamp in float BEFORE the int cast (same index for finite x, but a
+    # NaN/inf pre-activation no longer hits a backend-defined cast, and the
+    # clip statically guards the LUT gather on both sides)
+    idx = jnp.clip((x - lo) / (hi - lo) * (entries - 1),
+                   0, entries - 1).astype(jnp.int32)
     return lut[idx]
 
 

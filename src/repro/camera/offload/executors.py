@@ -44,7 +44,7 @@ import functools
 
 import numpy as np
 
-from repro.camera.offload.payloads import WirePayload
+from repro.camera.offload.payloads import PayloadSchema, WirePayload
 from repro.kernels.wire_codec.ops import (
     wire_bytes,
     wire_bytes_dynamic,
@@ -114,6 +114,23 @@ class FaceAuthOffloadExecutor:
     """
 
     CUTS = ("sensor", "motion", "vj", "nn")
+
+    # Declared wire contract per cut (repro.analysis cross-checks these
+    # against the avals _node_fn actually emits — see payloads.PayloadSchema)
+    PAYLOAD_SCHEMA = {
+        "sensor": PayloadSchema(codec=("frames",)),
+        "motion": PayloadSchema(codec=("mframes",),
+                                i32=("fidx", "motion_dropped"),
+                                bools=("motion",)),
+        "vj": PayloadSchema(codec=("patches",),
+                            i32=("wsel", "n_win", "win_dropped", "casc_drop",
+                                 "fidx", "motion_dropped"),
+                            bools=("motion",)),
+        "nn": PayloadSchema(codec=("scores",),
+                            i32=("wsel", "n_win", "win_dropped", "casc_drop",
+                                 "fidx", "motion_dropped"),
+                            bools=("motion", "auth")),
+    }
 
     def __init__(self, base, cut: str, *, bits: int | None = None,
                  block: int = 256, use_pallas=None, interpret: bool = False):
@@ -290,6 +307,12 @@ class VROffloadExecutor:
     """
 
     CUTS = ("capture", "depth", "stitch")
+
+    PAYLOAD_SCHEMA = {
+        "capture": PayloadSchema(codec=("lefts", "rights")),
+        "depth": PayloadSchema(codec=("depths", "lefts", "rights")),
+        "stitch": PayloadSchema(codec=("left_pano", "right_pano")),
+    }
 
     def __init__(self, base, cut: str, *, bits: int | None = None,
                  block: int = 256, use_pallas=None, interpret: bool = False):

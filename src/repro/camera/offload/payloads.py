@@ -40,6 +40,32 @@ def static_array_bytes(a) -> float:
     return float(size * dtype.itemsize)
 
 
+@dataclasses.dataclass(frozen=True)
+class PayloadSchema:
+    """Declared wire contract for one cut (repro.analysis pass 4).
+
+    Every array a node half may put on the wire must be declared here:
+    ``codec`` fields go through the wire codec (f32 raw at ``bits=None``,
+    packed+scales otherwise) and are charged per valid element at codec
+    width; ``i32`` sideband fields are charged at 4 B per valid entry;
+    ``bools`` ship bit-packed at 1/8 B.  The cut-soundness pass
+    cross-checks the declared fields against the avals the node half
+    actually emits — an undeclared array is *uncharged padding on the
+    wire* and fails analysis.
+    """
+
+    codec: tuple = ()
+    i32: tuple = ()
+    bools: tuple = ()
+
+    def declared(self, bits) -> set:
+        """Full expected key set of the node-half ``arrays`` dict."""
+        out = set(self.i32) | set(self.bools) | set(self.codec)
+        if bits is not None:
+            out |= {f + "_scales" for f in self.codec}
+        return out
+
+
 @dataclasses.dataclass
 class WirePayload:
     """One cut's wire payload (node-side jit output).

@@ -510,8 +510,13 @@ class FaceAuthExecutor:
             # (arange(20) * win // 20).clip(0, win - 1)
             off = jnp.minimum(t[None, None, :] * ww[:, :, None] // BASE,
                               ww[:, :, None] - 1)              # (M, W, 20)
-            rows = wy[:, :, None] + off
-            cols = wx[:, :, None] + off
+            # two-sided clamp before the PROMISE_IN_BOUNDS patch gather:
+            # every (pos_y, pos_x, pos_win) row fits the frame by
+            # construction, so this is a no-op for real tables — it makes
+            # the in-bounds promise *static* instead of data-dependent
+            h_m, w_m = mframes.shape[-2:]
+            rows = jnp.clip(wy[:, :, None] + off, 0, h_m - 1)
+            cols = jnp.clip(wx[:, :, None] + off, 0, w_m - 1)
             patches = jax.vmap(
                 lambda fr, r, co: fr[r[:, :, None], co[:, None, :]])(
                     mframes, rows, cols)                       # (M, W, 20, 20)

@@ -32,8 +32,11 @@ def cylindrical_warp(img: jax.Array, f: float) -> jax.Array:
     hh = (ys - yc) / f
     x_src = f * jnp.tan(theta) + xc
     y_src = hh * f / jnp.cos(theta) + yc
-    x0 = jnp.clip(x_src.astype(jnp.int32), 0, w - 1)
-    y0 = jnp.clip(y_src.astype(jnp.int32), 0, h - 1)
+    # clamp in float BEFORE the int cast: tan/cos blow up near the cylinder
+    # edge, and float->int casts of NaN/inf are backend-defined (the masked
+    # lanes must still index in-bounds).  Same values wherever ``valid``.
+    x0 = jnp.clip(x_src, 0, w - 1).astype(jnp.int32)
+    y0 = jnp.clip(y_src, 0, h - 1).astype(jnp.int32)
     valid = (x_src >= 0) & (x_src < w) & (y_src >= 0) & (y_src < h)
     return jnp.where(valid, img[..., y0, x0], 0.0)
 
@@ -91,7 +94,10 @@ def stereo_panorama(left_views, right_views, depths, ipd_px: float = 6.0):
     depths = jnp.asarray(depths)                  # (n, h, w)
     w = right_views.shape[-1]
     dmax = jnp.maximum(depths.max(axis=(-2, -1), keepdims=True), 1e-6)
-    shift = (ipd_px * depths / dmax).astype(jnp.int32)
+    # clamp the disparity in float before casting: the cast of a NaN depth
+    # would be backend-defined, and the shift can never usefully exceed the
+    # row width anyway (the gather index is re-clipped below).
+    shift = jnp.clip(ipd_px * depths / dmax, 0, w - 1).astype(jnp.int32)
     xs = jnp.clip(jnp.arange(w)[None, None, :] - shift, 0, w - 1)
     shifted = jnp.take_along_axis(right_views, xs, axis=-1)
     return stitch_ring(left_views), stitch_ring(shifted)

@@ -552,6 +552,11 @@ class FusedDetector:
         def apply(frames, bases, sids, offsets, weights, thr, pol, al,
                   n_off, areas):
             norm_w = jnp.asarray(_NORM_W)
+            # the scale-id table rides in as a jit *argument* (NOTE above),
+            # so its in-bounds promise is data-dependent; clamp once — a
+            # no-op for real grids — to make the per-scale lookups below
+            # statically guarded
+            sids = jnp.clip(sids, 0, areas.shape[0] - 1)
 
             def one_frame(iif, ii2f):
                 nidx = bases[:, None] + n_off[sids]
@@ -572,9 +577,17 @@ class FusedDetector:
 
                 def stage_fn(lo, hi):
                     def fn(it):
+                        # the item triple rides through compaction as f32
+                        # (exact below 2^24); clamp in float before the int
+                        # casts so dead/padded slots index in-bounds instead
+                        # of hitting a backend-defined NaN cast
                         return haar_stage_scores(
-                            iif, it[:, 0].astype(jnp.int32),
-                            it[:, 1].astype(jnp.int32), it[:, 2],
+                            iif,
+                            jnp.clip(it[:, 0], 0,
+                                     iif.shape[0] - 1).astype(jnp.int32),
+                            jnp.clip(it[:, 1], 0,
+                                     areas.shape[0] - 1).astype(jnp.int32),
+                            it[:, 2],
                             offsets[:, lo:hi], weights[lo:hi], thr[lo:hi],
                             pol[lo:hi], al[lo:hi],
                             use_pallas=use_pallas, interpret=interpret)

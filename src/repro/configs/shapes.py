@@ -34,3 +34,48 @@ def applicable(cfg, shape: ShapeSpec) -> tuple:
     if shape.name == "long_500k" and not cfg.sub_quadratic:
         return False, "full-attention arch: long_500k requires sub-quadratic attention (assignment rule; see DESIGN.md §4)"
     return True, ""
+
+
+# ---------------------------------------------------------------------------
+# Kernel legality cases (repro.analysis pass 3)
+# ---------------------------------------------------------------------------
+# Representative shapes each Pallas kernel must tile legally at: the camera
+# pipelines' native sizes (security_video 144x176, stereo_pair 256x320, the
+# paper's 4K VR eye) and the LM SHAPES above for the two sequence kernels.
+# Each entry is interpreted by that kernel package's ANALYSIS.plan hook.
+
+KERNEL_SHAPES = {
+    "integral_image": [
+        {"case": "fa_native", "n": 8, "h": 144, "w": 176, "block_h": 32},
+        {"case": "vr_4k_eye", "n": 1, "h": 2160, "w": 3840, "block_h": 32},
+    ],
+    "haar_frontend": [
+        {"case": "fa_scan", "n_windows": 5868, "L": 145 * 177,
+         "n_scales": 4, "sz": 33, "K": 8, "block_n": 256},
+    ],
+    "quant_matmul": [
+        {"case": "fa_nn_l1", "m": 512, "k": 400, "n": 8},
+        {"case": "fa_nn_l2", "m": 512, "k": 8, "n": 1},
+        {"case": "grad_tile", "m": 1024, "k": 1024, "n": 1024},
+    ],
+    "wire_codec": [
+        {"case": "fa_motion_cut", "n_values": 5 * 144 * 176, "bits": 8},
+        {"case": "vr_depth_cut", "n_values": 2 * 256 * 320, "bits": 4},
+    ],
+    "flash_attention": [
+        {"case": "train_4k", "bh": 8, "s": 4096, "d": 128,
+         "block_q": 256, "block_k": 256},
+        {"case": "prefill_32k", "bh": 8, "s": 32_768, "d": 128,
+         "block_q": 256, "block_k": 256},
+    ],
+    "rwkv_scan": [
+        {"case": "train_4k", "bh": 8, "T": 4096, "K": 64, "V": 64,
+         "chunk": 32},
+    ],
+    "bilateral_blur": [
+        {"case": "vr_stereo", "h": 256, "w": 320, "sigma_spatial": 16,
+         "sigma_range": 16.0, "block_gy": 32},
+        {"case": "vr_4k_eye", "h": 2160, "w": 3840, "sigma_spatial": 16,
+         "sigma_range": 16.0, "block_gy": 32},
+    ],
+}

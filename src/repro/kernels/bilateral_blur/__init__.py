@@ -1,0 +1,33 @@
+"""Analysis registration hook (repro.analysis pass 3: kernel legality)."""
+
+import math
+
+from repro.analysis.spec import (DivCheck, FnPair, KernelAnalysisSpec,
+                                 KernelPlan, Tile, adapt_block)
+from repro.kernels.bilateral_blur.kernel import bilateral_blur_pallas
+from repro.kernels.bilateral_blur.ref import blur_ref
+
+
+def _plan(case):
+    # bilateral-grid dims, mirroring bssa.GridSpec.dims
+    gy = math.ceil(case["h"] / case["sigma_spatial"]) + 1
+    gx = math.ceil(case["w"] / case["sigma_spatial"]) + 1
+    gr = math.ceil(256.0 / case.get("sigma_range", 16.0)) + 1
+    bgy = adapt_block(gy, case.get("block_gy", 32))  # ops.py shrinks to divisor
+    return KernelPlan(
+        case=case["case"],
+        grid=(gy // bgy,),
+        tiles=[Tile("val_halo_block", (1, bgy + 2, gx, gr)),
+               Tile("wt_halo_block", (1, bgy + 2, gx, gr)),
+               Tile("val_out_block", (1, bgy, gx, gr)),
+               Tile("wt_out_block", (1, bgy, gx, gr))],
+        checks=[DivCheck("gy % block_gy", gy, bgy)],
+    )
+
+
+ANALYSIS = KernelAnalysisSpec(
+    name="bilateral_blur",
+    pairs=[FnPair(bilateral_blur_pallas, blur_ref,
+                  frozenset({"block_gy", "interpret"}))],
+    plan=_plan,
+)

@@ -1,0 +1,34 @@
+"""Analysis registration hook (repro.analysis pass 3: kernel legality)."""
+
+from repro.analysis.spec import (DivCheck, FnPair, KernelAnalysisSpec,
+                                 KernelPlan, Tile, round_up)
+from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _plan(case):
+    bh, s, d = case["bh"], case["s"], case["d"]
+    bq = min(case.get("block_q", 256), max(s, 1))
+    bk = min(case.get("block_k", 256), max(s, 1))
+    sq, sk = round_up(s, bq), round_up(s, bk)   # ops.py pads both seq axes
+    return KernelPlan(
+        case=case["case"],
+        grid=(bh, sq // bq, sk // bk),
+        tiles=[Tile("q_block", (1, bq, d)),
+               Tile("k_block", (1, bk, d)),
+               Tile("v_block", (1, bk, d)),
+               Tile("out_block", (1, bq, d)),
+               Tile("m_scratch", (bq,)),
+               Tile("l_scratch", (bq,)),
+               Tile("acc_scratch", (bq, d))],
+        checks=[DivCheck("s_pad % block_q", sq, bq),
+                DivCheck("t_pad % block_k", sk, bk)],
+    )
+
+
+ANALYSIS = KernelAnalysisSpec(
+    name="flash_attention",
+    pairs=[FnPair(flash_attention_bhsd, attention_ref,
+                  frozenset({"block_q", "block_k", "interpret"}))],
+    plan=_plan,
+)

@@ -1,0 +1,36 @@
+"""Analysis registration hook (repro.analysis pass 3: kernel legality)."""
+
+from repro.analysis.spec import (DivCheck, FnPair, KernelAnalysisSpec,
+                                 KernelPlan, Tile, round_up)
+from repro.kernels.haar_frontend.kernel import haar_stage_scores_pallas
+from repro.kernels.haar_frontend.ref import haar_stage_scores_ref
+
+
+def _plan(case):
+    n, L = case["n_windows"], case["L"]
+    n_scales, sz, K = case["n_scales"], case["sz"], case["K"]
+    lp = round_up(L, 128)                       # kernel pads the ii table
+    bn = min(case.get("block_n", 256), round_up(n, 8))
+    npad = round_up(n, bn)                      # kernel pads the window axis
+    return KernelPlan(
+        case=case["case"],
+        grid=(npad // bn,),
+        tiles=[Tile("ii", (1, lp)),
+               Tile("base", (1, bn), "int32"),
+               Tile("sid", (1, bn), "int32"),
+               Tile("inv_norm", (1, bn)),
+               Tile("offsets", (n_scales, sz * K), "int32"),
+               Tile("weights", (1, sz * K)),
+               Tile("stump_params", (3, sz)),
+               Tile("out_scores", (1, bn))],
+        checks=[DivCheck("npad % block_n", npad, bn),
+                DivCheck("lp % 128", lp, 128)],
+    )
+
+
+ANALYSIS = KernelAnalysisSpec(
+    name="haar_frontend",
+    pairs=[FnPair(haar_stage_scores_pallas, haar_stage_scores_ref,
+                  frozenset({"block_n", "interpret"}))],
+    plan=_plan,
+)

@@ -1,0 +1,27 @@
+"""Analysis registration hook (repro.analysis pass 3: kernel legality)."""
+
+from repro.analysis.spec import (DivCheck, FnPair, KernelAnalysisSpec,
+                                 KernelPlan, Tile, adapt_block)
+from repro.kernels.integral_image.kernel import integral_image_pallas
+from repro.kernels.integral_image.ref import integral_ref
+
+
+def _plan(case):
+    n, h, w = case["n"], case["h"], case["w"]
+    bh = adapt_block(h, case.get("block_h", 32))     # ops.py shrinks to divisor
+    return KernelPlan(
+        case=case["case"],
+        grid=(n, h // bh),
+        tiles=[Tile("img_block", (1, bh, w)),
+               Tile("out_block", (1, bh, w)),
+               Tile("row_carry", (w,))],
+        checks=[DivCheck("h % block_h", h, bh)],
+    )
+
+
+ANALYSIS = KernelAnalysisSpec(
+    name="integral_image",
+    pairs=[FnPair(integral_image_pallas, integral_ref,
+                  frozenset({"block_h", "interpret"}))],
+    plan=_plan,
+)

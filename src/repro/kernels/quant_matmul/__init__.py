@@ -1,0 +1,36 @@
+"""Analysis registration hook (repro.analysis pass 3: kernel legality)."""
+
+from repro.analysis.spec import (DivCheck, FnPair, KernelAnalysisSpec,
+                                 KernelPlan, Tile, round_up)
+from repro.kernels.quant_matmul.kernel import quant_matmul_pallas
+from repro.kernels.quant_matmul.ref import quant_matmul_ref
+
+
+def _plan(case):
+    m, k, n = case["m"], case["k"], case["n"]
+    # mirror ops.quant_matmul's block choice + zero-padding
+    bm = 8 if m <= 8 else 128
+    bk = 128 if k >= 128 else k
+    bn = 128 if n >= 128 else n
+    mp, kp, np_ = round_up(m, bm), round_up(k, bk), round_up(n, bn)
+    return KernelPlan(
+        case=case["case"],
+        grid=(mp // bm, np_ // bn, kp // bk),
+        tiles=[Tile("x_block", (bm, bk), "int8"),
+               Tile("w_block", (bk, bn), "int8"),
+               Tile("lut", (256,)),
+               Tile("bias", (1, bn)),
+               Tile("out_block", (bm, bn)),
+               Tile("acc_scratch", (bm, bn), "int32")],
+        checks=[DivCheck("m_pad % block_m", mp, bm),
+                DivCheck("k_pad % block_k", kp, bk),
+                DivCheck("n_pad % block_n", np_, bn)],
+    )
+
+
+ANALYSIS = KernelAnalysisSpec(
+    name="quant_matmul",
+    pairs=[FnPair(quant_matmul_pallas, quant_matmul_ref,
+                  frozenset({"block_m", "block_n", "block_k", "interpret"}))],
+    plan=_plan,
+)

@@ -1,0 +1,32 @@
+"""Analysis registration hook (repro.analysis pass 3: kernel legality)."""
+
+from repro.analysis.spec import (DivCheck, FnPair, KernelAnalysisSpec,
+                                 KernelPlan, Tile, round_up)
+from repro.kernels.rwkv_scan.kernel import rwkv_wkv_pallas
+from repro.kernels.rwkv_scan.ref import wkv_ref
+
+
+def _plan(case):
+    bh, T, K, V = case["bh"], case["T"], case["K"], case["V"]
+    chunk = case.get("chunk", 32)
+    Tp = round_up(T, chunk)                     # ops.py pads T
+    return KernelPlan(
+        case=case["case"],
+        grid=(bh, Tp // chunk),
+        tiles=[Tile("r_block", (1, chunk, K)),
+               Tile("k_block", (1, chunk, K)),
+               Tile("v_block", (1, chunk, V)),
+               Tile("w_block", (1, chunk, K)),
+               Tile("u", (1, K)),
+               Tile("out_block", (1, chunk, V)),
+               Tile("state_scratch", (K, V))],
+        checks=[DivCheck("T_pad % chunk", Tp, chunk)],
+    )
+
+
+ANALYSIS = KernelAnalysisSpec(
+    name="rwkv_scan",
+    pairs=[FnPair(rwkv_wkv_pallas, wkv_ref,
+                  frozenset({"chunk", "interpret"}))],
+    plan=_plan,
+)

@@ -1,0 +1,36 @@
+"""Analysis registration hook (repro.analysis pass 3: kernel legality)."""
+
+from repro.analysis.spec import (DivCheck, FnPair, KernelAnalysisSpec,
+                                 KernelPlan, Tile, round_up)
+from repro.kernels.wire_codec.kernel import (wire_decode_pallas,
+                                             wire_encode_pallas)
+from repro.kernels.wire_codec.ref import wire_decode_ref, wire_encode_ref
+
+BLOCK = 256   # values per codec block (ops.BLOCK)
+
+
+def _plan(case):
+    bits = case["bits"]
+    nb = -(-case["n_values"] // BLOCK)
+    bm = min(case.get("block_rows", 32), nb)
+    nbp = round_up(nb, bm)                      # ops.py pads rows
+    pw = BLOCK * bits // 8
+    return KernelPlan(
+        case=case["case"],
+        grid=(nbp // bm,),
+        tiles=[Tile("blocks", (bm, BLOCK)),
+               Tile("packed", (bm, pw), "uint8"),
+               Tile("scales", (bm, 1)),
+               Tile("decoded", (bm, BLOCK))],
+        checks=[DivCheck("nb_pad % block_rows", nbp, bm)],
+    )
+
+
+ANALYSIS = KernelAnalysisSpec(
+    name="wire_codec",
+    pairs=[FnPair(wire_encode_pallas, wire_encode_ref,
+                  frozenset({"bits", "block_rows", "interpret"})),
+           FnPair(wire_decode_pallas, wire_decode_ref,
+                  frozenset({"bits", "block_rows", "interpret"}))],
+    plan=_plan,
+)

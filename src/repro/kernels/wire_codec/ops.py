@@ -77,7 +77,7 @@ def wire_encode(x, *, bits: int = 8, block: int = BLOCK,
             _pad_rows(blocks, bm), bits=bits, block_rows=bm,
             interpret=interpret)
         return packed[:nb], scales[:nb]
-    return wire_encode_ref(blocks, bits)
+    return wire_encode_ref(blocks, bits=bits)
 
 
 @functools.partial(jax.jit, static_argnames=(
@@ -92,7 +92,7 @@ def wire_decode(packed, scales, shape, *, bits: int = 8, block: int = BLOCK,
             _pad_rows(packed, bm), _pad_rows(scales, bm), bits=bits,
             block_rows=bm, interpret=interpret)[:nb]
     else:
-        blocks = wire_decode_ref(packed, scales, bits)
+        blocks = wire_decode_ref(packed, scales, bits=bits)
     n = math.prod(shape)
     return blocks.reshape(-1)[:n].reshape(shape)
 

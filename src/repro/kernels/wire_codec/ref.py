@@ -63,12 +63,12 @@ def unpack_ref(packed, bits: int):
     return v - ((v & 0x8000) << 1)           # sign-extend 16 bits
 
 
-def wire_encode_ref(blocks, bits: int = 8):
+def wire_encode_ref(blocks, *, bits: int = 8):
     """(n_blocks, block) f32 -> (packed int8, scales (n_blocks, 1) f32)."""
     q, scale = quantize_blocks_ref(blocks, bits)
     return pack_ref(q, bits), scale
 
 
-def wire_decode_ref(packed, scales, bits: int = 8):
+def wire_decode_ref(packed, scales, *, bits: int = 8):
     """(packed, scales) -> (n_blocks, block) f32 dequantized blocks."""
     return unpack_ref(packed, bits).astype(jnp.float32) * scales

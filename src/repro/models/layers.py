@@ -180,8 +180,8 @@ def dense(w: jax.Array, x: jax.Array, eq: str, waxes: Optional[tuple] = None) ->
     y_spec = P(*([None, "model"] + [None] * (out_ndim - 2)))
     # ambient mesh when nested inside the pod-manual compressed-gradient
     # region (axis_types must match); concrete mesh otherwise
-    from repro.parallel.axes import shard_map_mesh
-    fn = jax.shard_map(
+    from repro.parallel.axes import compat_shard_map, shard_map_mesh
+    fn = compat_shard_map(
         body, mesh=shard_map_mesh(ctx), in_specs=(x_spec, w_spec),
         out_specs=y_spec, axis_names=frozenset({"model"}), check_vma=False,
     )

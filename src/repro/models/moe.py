@@ -274,8 +274,8 @@ def _moe_shard_mapped(params, cfg, m: MoEConfig, x, ctx):
 
     # ambient mesh when nested inside outer partial-manual regions (pod-axis
     # gradient compression); concrete mesh otherwise
-    from repro.parallel.axes import shard_map_mesh
-    fn = jax.shard_map(
+    from repro.parallel.axes import compat_shard_map, shard_map_mesh
+    fn = compat_shard_map(
         body, mesh=shard_map_mesh(ctx),
         in_specs=(w_spec, x_spec),
         out_specs=(x_spec, P()),

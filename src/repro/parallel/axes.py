@@ -158,6 +158,32 @@ def _manual_axes() -> frozenset:
         return frozenset()
 
 
+def compat_shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+                     check_vma=True):
+    """``jax.shard_map`` across jax versions.
+
+    Newer jax exposes ``jax.shard_map(..., axis_names=, check_vma=)``;
+    0.4.x only has ``jax.experimental.shard_map.shard_map`` with the
+    complementary ``auto=`` set and ``check_rep=``.  Partial-manual regions
+    (``axis_names`` a strict subset of the mesh axes) need a concrete mesh
+    on 0.4.x to compute the complement.
+    """
+    if hasattr(jax, "shard_map"):
+        kwargs = {"check_vma": check_vma}
+        if axis_names is not None:
+            kwargs["axis_names"] = axis_names
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kwargs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    kwargs = {"check_rep": check_vma}
+    if axis_names is not None and mesh is not None:
+        auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+        if auto:
+            kwargs["auto"] = auto
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kwargs)
+
+
 def shard_map_mesh(ctx):
     """Mesh argument for a nested-safe shard_map: None (bind the ambient
     context mesh) when tracing inside another shard_map region, else the

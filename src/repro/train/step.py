@@ -115,7 +115,8 @@ def make_train_step_compressed(model, opt_cfg: AdamWConfig, pod_axis: str = "pod
         # batch tensors carry the pod shard on dim 0; everything else is
         # replicated across pods (params/opt/ef live pod-replicated, sharded
         # over data/model by the auto axes).
-        fn = jax.shard_map(
+        from repro.parallel.axes import compat_shard_map
+        fn = compat_shard_map(
             per_pod_step,
             mesh=mesh,
             # prefix specs: batch sharded over pod on dim 0; params/opt/ef and

@@ -7,7 +7,16 @@ import subprocess
 import sys
 import textwrap
 
+import jax
 import pytest
+
+# Pin the precision platform: the analysis precision/dispatch passes (and
+# the int8 bit-exactness contracts) are only stable with x64 promotion off.
+# Assert rather than silently re-pin so an env/plugin that flipped it is
+# surfaced instead of masked.
+jax.config.update("jax_enable_x64", False)
+assert not jax.config.jax_enable_x64, (
+    "jax_enable_x64 must stay False for precision-domain analysis")
 
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))

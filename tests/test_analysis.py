@@ -1,0 +1,394 @@
+"""Static analyzer (repro.analysis, DESIGN.md §11).
+
+Two layers:
+
+* synthetic-violation units — tiny hand-built jaxprs/specs that each
+  violate exactly one contract, pinning that every pass family actually
+  fires (and stays quiet on the sanctioned variant);
+* the repo gate — the real tree analyzed end-to-end must report nothing
+  beyond the checked-in baseline (tier-1's "no new violations" contract).
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.passes import (
+    CutPass, DispatchPass, KernelPass, PassContext, PrecisionPass)
+from repro.analysis.report import AnalysisReport, Baseline, Finding, PassResult
+from repro.analysis.spec import (
+    DivCheck, FnPair, KernelAnalysisSpec, KernelPlan, Tile, adapt_block,
+    signature_mismatches)
+from repro.camera.offload.payloads import PayloadSchema
+
+
+def _codes(findings):
+    return sorted({f.code for f in findings})
+
+
+def _dispatch_lint(fn, *args):
+    return DispatchPass()._lint("synth", jax.make_jaxpr(fn)(*args))
+
+
+def _precision_lint(fn, *args):
+    return PrecisionPass()._lint("synth", jax.make_jaxpr(fn)(*args))
+
+
+# ---------------------------------------------------------------------------
+# dispatch family
+# ---------------------------------------------------------------------------
+
+
+class TestDispatchPass:
+    def test_nested_pmap_flagged(self):
+        out = _dispatch_lint(lambda x: jax.pmap(lambda y: y * 2)(x),
+                             jnp.zeros((1, 4)))
+        assert "D001" in _codes(out)
+
+    def test_debug_callback_flagged(self):
+        def fn(x):
+            jax.debug.print("x = {}", x)
+            return x + 1
+
+        assert "D003" in _codes(_dispatch_lint(fn, jnp.zeros((3,))))
+
+    def test_f64_promotion_point_flagged(self):
+        with jax.experimental.enable_x64(True):
+            out = _dispatch_lint(lambda x: x.astype(jnp.float64),
+                                 jnp.zeros((3,), jnp.float32))
+        assert "D004" in _codes(out)
+        assert not jax.config.jax_enable_x64      # context restored
+
+    def test_unguarded_gather_flagged_guarded_quiet(self):
+        x = jnp.arange(8.0)
+        i = jnp.array([1, 2])
+        bad = _dispatch_lint(lambda x, i: x[i], x, i)
+        assert "D005" in _codes(bad)
+        good = _dispatch_lint(lambda x, i: x[jnp.clip(i, 0, 7)], x, i)
+        assert "D005" not in _codes(good)
+        # fill-mode gathers are self-guarding
+        fill = _dispatch_lint(lambda x, i: jnp.take(x, i), x, i)
+        assert "D005" not in _codes(fill)
+
+    def test_unclamped_cast_flagged_clamped_quiet(self):
+        x = jnp.zeros((3,), jnp.float32)
+        bad = _dispatch_lint(lambda x: x.astype(jnp.int32), x)
+        assert "D006" in _codes(bad)
+        good = _dispatch_lint(
+            lambda x: jnp.clip(x, 0, 10).astype(jnp.int32), x)
+        assert "D006" not in _codes(good)
+
+
+# ---------------------------------------------------------------------------
+# precision family
+# ---------------------------------------------------------------------------
+
+
+class TestPrecisionPass:
+    def test_unscaled_dequant_flagged_scaled_quiet(self):
+        q = jnp.zeros((4,), jnp.int8)
+        bad = _precision_lint(
+            lambda q: jnp.sum(q.astype(jnp.float32) + 1.0), q)
+        assert "P001" in _codes(bad)
+        good = _precision_lint(
+            lambda q: jnp.sum(q.astype(jnp.float32) * 0.5), q)
+        assert "P001" not in _codes(good)
+
+    def test_unclipped_quant_cast_flagged(self):
+        x = jnp.zeros((4,), jnp.float32)
+        bad = _precision_lint(lambda x: x.astype(jnp.int8), x)
+        assert "P002" in _codes(bad)
+        good = _precision_lint(
+            lambda x: jnp.clip(x, -127, 127).astype(jnp.int8), x)
+        assert "P002" not in _codes(good)
+
+    def test_narrow_dot_without_wide_accum_flagged(self):
+        a = jnp.zeros((4, 4), jnp.int8)
+        dn = (((1,), (0,)), ((), ()))
+        bad = _precision_lint(
+            lambda a, b: jax.lax.dot_general(a, b, dn), a, a)
+        assert "P004" in _codes(bad)
+        good = _precision_lint(
+            lambda a, b: jax.lax.dot_general(
+                a, b, dn, preferred_element_type=jnp.int32), a, a)
+        assert "P004" not in _codes(good)
+
+    def test_lut_meta_drift_flagged(self):
+        from repro.analysis.registry import ExecutorTarget
+        from repro.camera.face_nn import make_sigmoid_lut
+
+        lut, meta = make_sigmoid_lut()
+        clean = ExecutorTarget("synth", None, (), lut_pairs=((lut, meta),))
+        assert PrecisionPass()._lut_spec(clean) == []
+        drifted = ExecutorTarget(
+            "synth", None, (),
+            lut_pairs=((lut.at[3].set(0.5), meta),))
+        assert _codes(PrecisionPass()._lut_spec(drifted)) == ["P003"]
+
+
+# ---------------------------------------------------------------------------
+# kernel family
+# ---------------------------------------------------------------------------
+
+
+def _synth_kernel_ctx(plan_fn, *, name="synth_kernel", pairs=(),
+                      shapes=None, missing=()):
+    spec = KernelAnalysisSpec(name, list(pairs), plan_fn)
+    return PassContext(
+        targets=[], cut_families=[], kernel_specs=[spec],
+        kernel_missing=list(missing),
+        kernel_shapes={name: shapes} if shapes is not None else {})
+
+
+class TestKernelPass:
+    def test_nondivisible_blockspec_flagged(self):
+        def plan(case):
+            return KernelPlan(case["case"], grid=(3,),
+                              tiles=[Tile("in", (33, 128))],
+                              checks=[DivCheck("h % block_h", 100, 33)])
+
+        res = KernelPass().run(_synth_kernel_ctx(
+            plan, shapes=[{"case": "c0"}]))
+        assert _codes(res.findings) == ["K001"]
+
+    def test_vmem_budget_flagged(self):
+        def plan(case):
+            return KernelPlan(case["case"], grid=(1,),
+                              tiles=[Tile("big", (4096, 4096))],  # 64 MiB f32
+                              checks=[])
+
+        res = KernelPass().run(_synth_kernel_ctx(
+            plan, shapes=[{"case": "c0"}]))
+        assert _codes(res.findings) == ["K002"]
+
+    def test_signature_drift_flagged(self):
+        def kernel(a, b, *, block_m=8, mystery=1, interpret=False):
+            return a
+
+        def ref(a, b):
+            return a
+
+        msgs = signature_mismatches(
+            FnPair(kernel, ref, frozenset({"block_m", "interpret"})))
+        assert any("mystery" in m for m in msgs)
+        res = KernelPass().run(_synth_kernel_ctx(
+            lambda case: KernelPlan(case["case"], (1,), [], []),
+            pairs=[FnPair(kernel, ref, frozenset({"block_m", "interpret"}))],
+            shapes=[{"case": "c0"}]))
+        assert "K003" in _codes(res.findings)
+
+    def test_missing_shapes_and_hook_flagged(self):
+        res = KernelPass().run(_synth_kernel_ctx(
+            lambda case: KernelPlan("c", (1,), [], []),
+            shapes=None, missing=["ghost_kernel"]))
+        assert _codes(res.findings) == ["K004", "K005"]
+
+    def test_adapt_block_matches_wrapper_convention(self):
+        assert adapt_block(144, 32) == 24      # largest divisor <= 32
+        assert adapt_block(100, 33) == 25
+        assert adapt_block(7, 32) == 7
+        assert adapt_block(5, 3) == 1
+
+
+# ---------------------------------------------------------------------------
+# cut family
+# ---------------------------------------------------------------------------
+
+
+def _cut_ctx(exec_cls, template_blocks):
+    from repro.analysis.registry import CutFamily
+
+    fam = CutFamily(
+        name="synth_fam", executor_cls=exec_cls,
+        make=lambda cut, bits: exec_cls(),
+        node_args=lambda ex: (jnp.zeros((2,), jnp.float32),),
+        template_blocks=tuple(template_blocks))
+    return PassContext(targets=[], cut_families=[fam], kernel_specs=[],
+                       kernel_missing=[], kernel_shapes={})
+
+
+class TestCutPass:
+    def test_undeclared_payload_field_flagged(self):
+        class Exec:
+            CUTS = ("a",)
+            PAYLOAD_SCHEMA = {"a": PayloadSchema(i32=("n",))}
+
+            def _node_fn(self, x):
+                return ({"n": jnp.zeros((), jnp.int32),
+                         "stowaway": jnp.zeros((64,), jnp.float32)}, 0.0)
+
+        res = CutPass().run(_cut_ctx(Exec, ("a",)))
+        hits = [f for f in res.findings if f.code == "C001"]
+        assert hits and all(f.where == "stowaway" for f in hits)
+
+    def test_codec_layout_drift_flagged(self):
+        # 300 logical values -> nb=2 blocks of 256 -> packed must be
+        # (2, 256) int8 + (2, 1) scales; shipping (2, 100) hides padding
+        class Exec:
+            CUTS = ("a",)
+            PAYLOAD_SCHEMA = {"a": PayloadSchema(codec=("x",))}
+
+            def __init__(self):
+                self.bits = None
+
+            def _node_fn(self, v):
+                if self.bits is None:
+                    return ({"x": jnp.zeros((300,), jnp.float32)}, 0.0)
+                return ({"x": jnp.zeros((2, 100), jnp.int8),
+                         "x_scales": jnp.zeros((2, 1), jnp.float32)}, 0.0)
+
+        from repro.analysis.registry import CutFamily
+
+        def make(cut, bits):
+            ex = Exec()
+            ex.bits = bits
+            return ex
+
+        fam = CutFamily("synth_fam", Exec, make,
+                        lambda ex: (jnp.zeros((2,), jnp.float32),), ("a",))
+        ctx = PassContext(targets=[], cut_families=[fam], kernel_specs=[],
+                          kernel_missing=[], kernel_shapes={})
+        res = CutPass().run(ctx)
+        assert "C003" in _codes(res.findings)
+
+    def test_unknown_cut_flagged(self):
+        class Exec:
+            CUTS = ("rogue",)
+            PAYLOAD_SCHEMA = {"rogue": PayloadSchema()}
+
+            def _node_fn(self, x):
+                return ({}, 0.0)
+
+        res = CutPass().run(_cut_ctx(Exec, ("a", "b")))
+        assert "C004" in _codes(res.findings)
+
+    def test_sideband_dtype_discipline_flagged(self):
+        class Exec:
+            CUTS = ("a",)
+            PAYLOAD_SCHEMA = {"a": PayloadSchema(i32=("n",))}
+
+            def _node_fn(self, x):
+                # charged at 4 B/entry but shipped as f32 — dtype drift
+                return ({"n": jnp.zeros((), jnp.float32)}, 0.0)
+
+        res = CutPass().run(_cut_ctx(Exec, ("a",)))
+        assert "C005" in _codes(res.findings)
+
+    def test_missing_schema_flagged(self):
+        class Exec:
+            CUTS = ("a",)
+            PAYLOAD_SCHEMA = {}
+
+            def _node_fn(self, x):
+                return ({}, 0.0)
+
+        res = CutPass().run(_cut_ctx(Exec, ("a",)))
+        assert "C002" in _codes(res.findings)
+
+
+# ---------------------------------------------------------------------------
+# report / baseline mechanics
+# ---------------------------------------------------------------------------
+
+
+class TestReport:
+    def _finding(self, **kw):
+        base = dict(family="dispatch", code="D004", subject="s",
+                    where="0:foo", message="msg")
+        base.update(kw)
+        return Finding(**base)
+
+    def test_fingerprint_ignores_message(self):
+        a = self._finding(message="one")
+        b = self._finding(message="two")
+        assert a.fingerprint == b.fingerprint
+        assert a.fingerprint != self._finding(where="1:bar").fingerprint
+
+    def test_baseline_roundtrip_and_strict(self, tmp_path):
+        rep = AnalysisReport(
+            [PassResult("dispatch", ["s"], [self._finding()])])
+        assert len(rep.new_findings(Baseline())) == 1
+        bl = Baseline.from_report(rep)
+        path = str(tmp_path / "baseline.json")
+        bl.save(path)
+        assert rep.new_findings(Baseline.load(path)) == []
+        # strict mode = no baseline at all
+        assert len(rep.new_findings(None)) == 1
+        totals = rep.to_dict(Baseline.load(path))["totals"]
+        assert totals == {"subjects": 1, "findings": 1, "baselined": 1,
+                          "non_baselined": 0}
+
+
+# ---------------------------------------------------------------------------
+# regressions for the violations the first full run surfaced (fixed at the
+# source, NOT baselined — the repo gate below keeps them from returning)
+# ---------------------------------------------------------------------------
+
+
+class TestFixedViolations:
+    def test_sigmoid_lut_defined_at_infinities(self):
+        """Pre-fix, the LUT index was cast-then-clipped: an inf
+        pre-activation hit a backend-defined float->int cast.  Now the clip
+        happens in float, so saturation is exact at both ends."""
+        from repro.camera.face_nn import make_sigmoid_lut, sigmoid_lut
+
+        lut, meta = make_sigmoid_lut()
+        x = jnp.array([jnp.inf, -jnp.inf, 0.0, 1e9, -1e9])
+        y = np.asarray(sigmoid_lut(x, lut, meta))
+        assert y[0] == y[3] == float(lut[-1])
+        assert y[1] == y[4] == float(lut[0])
+        # in-range values unchanged by the reordering
+        xs = jnp.linspace(-8.0, 8.0, 77)
+        lo, hi, entries = meta
+        idx = np.clip(((np.asarray(xs) - lo) / (hi - lo)
+                       * (entries - 1)).astype(np.int32), 0, entries - 1)
+        assert np.array_equal(np.asarray(sigmoid_lut(xs, lut, meta)),
+                              np.asarray(lut)[idx])
+
+    def test_cylindrical_warp_defined_at_extreme_angles(self):
+        """Pre-fix, tan/cos blowing up near the cylinder edge fed a
+        backend-defined float->int cast; the masked-out lanes must still
+        index in-bounds and come out exactly 0."""
+        from repro.camera.stitch import cylindrical_warp
+
+        img = jnp.ones((16, 64)) * 3.0
+        # f small enough that |theta| sweeps past pi/2 inside the grid
+        out = np.asarray(cylindrical_warp(img, f=8.0))
+        assert np.all(np.isfinite(out))
+        assert set(np.unique(out)) <= {0.0, 3.0}
+
+    def test_splat_and_slice_roundtrip_unchanged(self):
+        """The clip-before-cast reorder in splat/slice_grid must be
+        value-identical for finite images: a constant field survives the
+        splat -> refine -> slice roundtrip exactly as before."""
+        from repro.camera.bssa import GridSpec, slice_grid, splat
+
+        rng = np.random.RandomState(0)
+        img = jnp.asarray(rng.rand(24, 32).astype(np.float32))
+        spec = GridSpec(sigma_spatial=8)
+        gv, gw = splat(img, jnp.full(img.shape, 2.5), spec)
+        out = np.asarray(slice_grid(gv, gw, img, spec))
+        np.testing.assert_allclose(out, 2.5, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# the repo gate: real tree vs checked-in baseline
+# ---------------------------------------------------------------------------
+
+
+class TestRepoGate:
+    def test_tree_has_no_non_baselined_findings(self):
+        from repro.analysis import run_analysis
+
+        report = run_analysis()
+        new = report.new_findings(Baseline.load())
+        assert new == [], "non-baselined findings:\n" + "\n".join(
+            f"  {f}" for f in new)
+        # coverage floor: all four registered executors + 7 kernel packages
+        subs = report.subjects
+        assert len(subs["kernel"]) == 7
+        dispatch_subjects = " ".join(subs["dispatch"])
+        for must in ("face_auth.funnel", "vr_rig.depth", "vr_rig.panorama",
+                     "fa_offload", "vr_offload"):
+            assert must in dispatch_subjects

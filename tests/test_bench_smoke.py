@@ -15,7 +15,7 @@ import tempfile
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SECTIONS = ("fa", "vr", "vj", "nn", "bssa", "detect", "fa_hotpath",
-            "offload", "roofline")
+            "offload", "analysis", "roofline")
 
 
 def test_benchmark_smoke_all_sections():
@@ -43,3 +43,7 @@ def test_benchmark_smoke_all_sections():
         assert orow["fa_knee_at_8bit"][0] == "True"
         assert "agrees=True" in orow["fa_controller_choice"][1]
         assert "agrees=True" in orow["vr_controller_choice"][1]
+        ana = json.load(open(os.path.join(td, "BENCH_analysis.json")))
+        arow = {r[1]: r[2] for r in ana["rows"]}
+        assert arow["non_baselined"] == "0"
+        assert int(arow["kernel_subjects"]) == 7

@@ -236,6 +236,49 @@ class TestLinkSimulator:
         assert rep.latency_s.shape == (2, 2)
         assert np.all(rep.latency_s > 0)
 
+    def test_zero_length_trace(self):
+        """A zero-frame trace (e.g. a cut probed before any frame arrives)
+        must yield a well-formed all-zero report, not NaNs or div-by-zero."""
+        link = LinkProfile("l", bytes_per_s=1000.0, latency_s=0.01,
+                           joules_per_byte=1e-6)
+        for n_streams in (1, 3):
+            rep = simulate_shared_link(np.zeros((n_streams, 0)), link, 1.0)
+            assert rep.latency_s.shape == (n_streams, 0)
+            assert rep.bytes_total == 0.0
+            assert rep.joules == 0.0
+            assert rep.utilization == 0.0
+            assert rep.delivered_fps == 0.0
+            assert np.isfinite(rep.offered_bps)
+
+    def test_single_stream_fifo_ordering(self):
+        """One stream, one oversized frame: later frames queue behind it in
+        arrival order, each starting exactly when its predecessor drains."""
+        link = LinkProfile("l", bytes_per_s=1000.0)   # zero framing latency
+        rep = simulate_shared_link(np.array([[2500.0, 100.0, 100.0]]),
+                                   link, frame_period_s=1.0)
+        # frame 0: arrives t=0, serializes 2.5 s
+        assert rep.latency_s[0, 0] == pytest.approx(2.5)
+        # frame 1: arrives t=1, waits until 2.5, drains by 2.6
+        assert rep.latency_s[0, 1] == pytest.approx(1.6)
+        # frame 2: arrives t=2, waits until 2.6, drains by 2.7 — FIFO, so
+        # completion order matches arrival order even under queueing
+        assert rep.latency_s[0, 2] == pytest.approx(0.7)
+        done = np.arange(3) + rep.latency_s[0]
+        assert np.all(np.diff(done) > 0)
+
+    def test_subbyte_payload_still_charged(self):
+        """A payload whose valid-element bytes round to zero (e.g. a lone
+        bool sideband: 1/8 B) is still a transmission — framing latency and
+        energy are charged; only exactly-0.0 B frames ride free."""
+        link = LinkProfile("l", bytes_per_s=1000.0, latency_s=0.01,
+                           joules_per_byte=1e-6)
+        tiny = 1.0 / 8.0                       # one bool flag on the wire
+        rep = simulate_shared_link(np.array([[tiny]]), link, 1.0)
+        assert rep.latency_s[0, 0] == pytest.approx(0.01 + tiny / 1000.0)
+        assert rep.joules == pytest.approx(tiny * 1e-6)
+        zero = simulate_shared_link(np.array([[0.0]]), link, 1.0)
+        assert zero.latency_s[0, 0] == 0.0 and zero.joules == 0.0
+
 
 class _FakeSplitExec:
     """Deterministic stand-in with the split-executor protocol, for
