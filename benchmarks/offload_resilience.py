@@ -1,0 +1,222 @@
+"""Fault-injected offload sweep: loss rate x outage duty (BENCH_resilience).
+
+Everything BENCH_offload cannot say because PR 5 assumed a lossless link
+and uninterrupted power:
+
+  pin    — zero-fault OffloadSession output is bit-exact with the PR-5
+           split executor at every cut x bits, and a fault sweep under a
+           fixed seed reproduces row-for-row (the determinism acceptance:
+           the same BENCH_resilience.json twice).
+  sweep  — Gilbert-Elliott loss rate x outage duty on BACKSCATTER:
+           flipped-auth fraction vs fault-free, retransmit-byte overhead,
+           energy ratio, delivery/fallback fractions under the
+           degradation ladder.
+  brown  — harvested-energy brownouts: recovery latency and commit-point
+           resume (node restores mid-funnel state instead of recomputing
+           from capture), with the recovered result still exact.
+  cong   — congested retries: a faulty neighbor's retransmissions queue
+           against clean streams on the shared uplink; p99 clean vs
+           congested from the re-entered link simulator.
+
+All values are simulated-time/byte quantities — no wall clocks in the
+rows, so the JSON is reproducible bit-for-bit under the fixed seeds.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+_SEED = 4321
+
+
+def _fa(smoke: bool):
+    import jax.numpy as jnp
+
+    from benchmarks.fa_hotpath import _workload
+    from repro.camera.offload import FaceAuthOffloadExecutor
+    from repro.camera.pipelines import FaceAuthExecutor
+
+    frames, casc, nn, scan = _workload(smoke)
+    ex = FaceAuthExecutor(casc, nn, frames.shape[1], frames.shape[2], **scan)
+    ex.calibrate(frames)
+    fj = jnp.asarray(frames)
+    offs = {bits: FaceAuthOffloadExecutor(ex, "nn", bits=bits)
+            for bits in (16, 8, 4)}
+    return ex, fj, offs
+
+
+def _run_cell(ex, fj, offs, injector, n_sends, ladder_rungs):
+    """One sweep cell: a laddered session under ``injector``."""
+    from repro.camera.offload import DegradationLadder, OffloadSession
+    from repro.camera.offload.link import BACKSCATTER
+
+    sess = OffloadSession(
+        make_executor=lambda cut, bits: offs[bits], cut="nn", bits=16,
+        link=BACKSCATTER, injector=injector,
+        ladder=DegradationLadder(list(ladder_rungs)),
+        on_node_fn=lambda f: ex(f))
+    auths = []
+    for _ in range(n_sends):
+        got, _rec = sess.send(fj)
+        auths.append(None if got is None else np.asarray(got.auth))
+    return sess, auths
+
+
+def rows(smoke: bool = False):
+    import jax.numpy as jnp
+
+    from repro.camera.offload import (
+        BACKSCATTER,
+        BrownoutModel,
+        FaultInjector,
+        GilbertElliott,
+        ON_NODE,
+        OffloadSession,
+        fleet_link_report,
+    )
+
+    out = []
+    ex, fj, offs = _fa(smoke)
+    n_sends = 16 if smoke else 40
+    rungs = [("nn", 16), ("nn", 8), ("nn", 4), ON_NODE]
+
+    # ---- pin: zero-fault bit-exactness at every cut x bits -----------------
+    from repro.camera.offload import FaceAuthOffloadExecutor
+
+    pin_bits = (None, 8) if smoke else (None, 16, 8, 4)
+    fields = ("motion", "n_windows", "n_auth", "scores", "window_id",
+              "window_valid", "auth", "windows_dropped", "motion_dropped",
+              "cascade_dropped")
+    exact = True
+    for cut in FaceAuthOffloadExecutor.CUTS:
+        for bits in pin_bits:
+            off = FaceAuthOffloadExecutor(ex, cut, bits=bits)
+            want, _ = off(fj)
+            got, _rec = OffloadSession(off, link=BACKSCATTER).send(fj)
+            exact &= all(
+                bool(np.array_equal(np.asarray(getattr(want, f)),
+                                    np.asarray(getattr(got, f))))
+                for f in fields)
+    out.append(("resilience", "zero_fault_bitexact", int(exact),
+                f"session == PR5 executor, {len(FaceAuthOffloadExecutor.CUTS)}"
+                f" cuts x {len(pin_bits)} bit widths"))
+
+    # ---- pin: fixed-seed determinism (same JSON twice) ---------------------
+    det_inj = FaultInjector(loss=GilbertElliott(p_gb=0.2, p_bg=0.4),
+                            corrupt_fraction=0.3, seed=_SEED)
+    runs = []
+    for _ in range(2):
+        det_inj.reset()
+        sess, _ = _run_cell(ex, fj, offs, det_inj, max(n_sends // 2, 4),
+                            rungs)
+        runs.append([dataclasses.astuple(r) for r in sess.records])
+    out.append(("resilience", "determinism", int(runs[0] == runs[1]),
+                "identical delivery records across two seeded sweeps"))
+
+    # ---- fault-free baseline for the sweep ---------------------------------
+    base_sess, base_auth = _run_cell(ex, fj, offs, None, n_sends, rungs)
+    base_energy = base_sess.energy_j
+    out.append(("resilience", "baseline_energy_j", f"{base_energy:.6g}",
+                f"fault-free laddered session, {n_sends} sends at (nn,16)"))
+
+    # ---- sweep: loss rate x outage duty ------------------------------------
+    loss_rates = (0.05, 0.1) if smoke else (0.02, 0.05, 0.1, 0.2)
+    duties = (0.0, 0.2) if smoke else (0.0, 0.1, 0.2)
+    for loss in loss_rates:
+        # stationary loss = p_gb/(p_gb+p_bg); hold mean burst ~2.2 attempts
+        p_bg = 0.45
+        p_gb = loss * p_bg / (1.0 - loss)
+        for duty in duties:
+            # per-cell seed (still fixed) so cells sample distinct burst
+            # phases instead of replaying one lucky/unlucky trajectory
+            inj = FaultInjector(
+                loss=GilbertElliott(p_gb=p_gb, p_bg=p_bg),
+                outage_period_s=60.0 if duty else None, outage_duty=duty,
+                seed=_SEED + int(loss * 1000) + int(duty * 10))
+            sess, auths = _run_cell(ex, fj, offs, inj, n_sends, rungs)
+            delivered = [a is not None for a in auths]
+            flips = [float(np.mean(a != b))
+                     for a, b in zip(auths, base_auth) if a is not None]
+            retx = sum(r.attempts - 1 for r in sess.records)
+            att = sum(r.attempts for r in sess.records)
+            tag = f"loss{int(loss * 100):02d}_duty{int(duty * 100):02d}"
+            out.append(("resilience", f"{tag}_flip",
+                        f"{float(np.mean(flips)) if flips else 1.0:.4f}",
+                        "flipped-auth fraction vs fault-free"))
+            out.append(("resilience", f"{tag}_retx_overhead",
+                        f"{retx / max(att - retx, 1):.4f}",
+                        "retransmitted / first-attempt transmissions"))
+            out.append(("resilience", f"{tag}_energy_ratio",
+                        f"{sess.energy_j / base_energy:.4f}",
+                        "session energy vs fault-free"))
+            out.append(("resilience", f"{tag}_delivered",
+                        f"{float(np.mean(delivered)):.4f}",
+                        f"delivery fraction over {n_sends} sends "
+                        f"(rung ends {sess.ladder.rung})"))
+
+    # ---- brownout recovery --------------------------------------------------
+    import tempfile
+
+    bo = BrownoutModel(harvest_w=15e-6, storage_j=13e-6, load_w=200e-6,
+                       jitter=0.2)
+    binj = FaultInjector(brownout=bo, seed=_SEED)
+    off8 = offs[8]
+    want, _ = off8(fj)
+    with tempfile.TemporaryDirectory() as td:
+        bsess = OffloadSession(off8, link=BACKSCATTER, injector=binj,
+                               ckpt_dir=td, stage_cost_s=0.02)
+        n_b = 4 if smoke else 10
+        resumed_exact = True
+        for _ in range(n_b):
+            got, _rec = bsess.send(fj)
+            resumed_exact &= all(
+                bool(np.array_equal(np.asarray(getattr(want, f)),
+                                    np.asarray(getattr(got, f))))
+                for f in fields)
+        recs = bsess.records
+        out.append(("resilience", "brownout_resume_exact", int(resumed_exact),
+                    "commit-point recovery output == fused split executor"))
+        out.append(("resilience", "brownouts_total",
+                    sum(r.brownouts for r in recs),
+                    f"node power losses across {n_b} sends "
+                    f"(restores {sum(r.restores for r in recs)})"))
+        out.append(("resilience", "recovery_latency_s",
+                    f"{float(np.mean([r.recovery_s for r in recs])):.4f}",
+                    "mean dark+restore seconds per send (simulated)"))
+        prefix_once = all(bsess.stage_completed[s] <= n_b
+                          for s in ("motion", "detect", "gather"))
+        out.append(("resilience", "resume_not_recompute", int(prefix_once),
+                    "upstream stages never re-ran after a brownout"))
+
+    # ---- congestion: retries queue against neighbors ------------------------
+    def fleet(faulty):
+        sessions = []
+        for s in range(3):
+            inj = (FaultInjector(loss=GilbertElliott(p_gb=0.5, p_bg=0.3),
+                                 seed=_SEED + s) if faulty and s == 0
+                   else None)
+            fs = OffloadSession(off8, link=BACKSCATTER, injector=inj)
+            for _ in range(4 if smoke else 12):
+                fs.send(fj)
+            sessions.append(fs)
+        # globally-triggered rig (stagger=False): all three streams key up
+        # each frame slot, so stream 0's retries queue its neighbors
+        return fleet_link_report(sessions, BACKSCATTER, frame_period_s=1.0,
+                                 stagger=False)
+
+    clean, cong = fleet(False), fleet(True)
+    out.append(("resilience", "p99_clean_s", f"{clean.p99_latency_s:.4f}",
+                "3 clean streams sharing BACKSCATTER"))
+    out.append(("resilience", "p99_congested_s", f"{cong.p99_latency_s:.4f}",
+                "stream 0 faulty: its retries delay streams 1-2"))
+    out.append(("resilience", "congestion_bytes_overhead",
+                f"{cong.bytes_total / clean.bytes_total:.4f}",
+                "on-air bytes vs clean fleet"))
+    return out
+
+
+if __name__ == "__main__":
+    for row in rows(smoke=True):
+        print(",".join(str(c) for c in row))

@@ -3,7 +3,7 @@ assignment's roofline report.  Prints ``table,name,value,note`` CSV rows
 and wall time per section.
 
     PYTHONPATH=src python -m benchmarks.run \
-        [--only fa,vr,vj,nn,bssa,roofline,detect,fa_hotpath,offload] \
+        [--only fa,vr,vj,nn,bssa,roofline,detect,fa_hotpath,offload,resilience] \
         [--json OUT_DIR] [--smoke]
 
 ``--json OUT_DIR`` additionally writes each section's rows plus wall time
@@ -85,6 +85,16 @@ def _offload(smoke=False):
     # acceptance and the controller-vs-measured-optimum agreement)
     from benchmarks import offload_tradeoffs
     return offload_tradeoffs.rows(smoke=smoke)
+
+
+@section("resilience")
+def _resilience(smoke=False):
+    # fault-injected offload: loss rate x outage duty on BACKSCATTER
+    # (BENCH_resilience.json carries the zero-fault bit-exact pin, the
+    # fixed-seed determinism row, retransmit/energy overhead per cell,
+    # brownout commit-point recovery, and congested-retry fleet p99)
+    from benchmarks import offload_resilience
+    return offload_resilience.rows(smoke=smoke)
 
 
 @section("analysis")

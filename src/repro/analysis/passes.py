@@ -283,7 +283,8 @@ class CutPass:
     def run(self, ctx: PassContext) -> PassResult:
         import jax
 
-        from repro.camera.offload.payloads import static_array_bytes
+        from repro.camera.offload.payloads import (SESSION_SIDEBAND,
+                                                   static_array_bytes)
         from repro.kernels.wire_codec.ops import BLOCK, wire_bytes
 
         findings, subjects = [], []
@@ -315,6 +316,41 @@ class CutPass:
                 arrays_raw, _ = jax.eval_shape(ex_raw._node_fn,
                                                *fam.node_args(ex_raw))
                 raw_avals[cut] = arrays_raw
+
+                # C006: session-layer sideband discipline.  The resilience
+                # runtime (offload/resilience.OffloadSession) staples
+                # seq/crc/attempt onto every transmission at 4 B each; a
+                # cut that does not declare them ships uncharged framing,
+                # and a spec outside int32/uint32 breaks the 4 B charge.
+                spec = fam.session_spec if fam.session_spec is not None \
+                    else SESSION_SIDEBAND
+                spec_names = tuple(n for n, _ in spec)
+                declared_sb = tuple(schema.session)
+                for f in [n for n in spec_names if n not in declared_sb]:
+                    findings.append(Finding(
+                        "cut", "C006", f"{fam.name}[{cut}]", f,
+                        f"session sideband field {f!r} not declared in "
+                        "PayloadSchema.session: OffloadSession charges it "
+                        "on every transmission attempt but the wire "
+                        "contract does not admit it"))
+                for f in [n for n in declared_sb if n not in spec_names]:
+                    findings.append(Finding(
+                        "cut", "C006", f"{fam.name}[{cut}]", f,
+                        f"PayloadSchema.session declares unknown sideband "
+                        f"field {f!r} (spec has {spec_names})"))
+                for f, dt in spec:
+                    if dt not in ("int32", "uint32"):
+                        findings.append(Finding(
+                            "cut", "C006", f"{fam.name}[{cut}]", f,
+                            f"session sideband field {f!r} has dtype {dt} "
+                            "but is charged at 4 B/attempt — int32/uint32 "
+                            "only"))
+                for f in sorted(set(spec_names) & set(arrays_raw)):
+                    findings.append(Finding(
+                        "cut", "C006", f"{fam.name}[{cut}]", f,
+                        f"session sideband name {f!r} collides with a "
+                        "node-half payload array: receiver framing would "
+                        "shadow payload data"))
                 for bits in (None, 8):
                     subj = f"{fam.name}[{cut},{bits or 'raw'}]"
                     if bits is None:

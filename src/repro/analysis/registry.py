@@ -34,6 +34,9 @@ class CutFamily:
     make: object             # (cut, bits) -> offload executor
     node_args: object        # (offload_ex) -> node-half example args
     template_blocks: tuple   # analytic pipeline block names
+    # expected session-layer sideband spec for pass C006; None means the
+    # canonical payloads.SESSION_SIDEBAND (seq/crc/attempt, uint32/int32)
+    session_spec: object = None
 
 
 @functools.lru_cache(maxsize=None)

@@ -4,7 +4,11 @@ Splits the live §III/§IV executors at any legal cut point into a
 node-side and a cloud-side jit region with a typed, codec-compressed wire
 payload between them; replays measured payload traces through a link
 simulator; and closes the loop from measured executors back into
-``core.placement.solve_cut`` via the cut controller.
+``core.placement.solve_cut`` via the cut controller.  The resilience
+layer (DESIGN.md §12) wraps the split executors in fault-tolerant
+sessions: seeded burst-loss/outage/brownout injection, checksummed
+retransmission charged at real link cost, commit-point brownout
+recovery, and a measured graceful-degradation ladder.
 """
 
 from repro.camera.offload.controller import (
@@ -20,25 +24,51 @@ from repro.camera.offload.link import (
     BACKSCATTER,
     ETH_25G_LINK,
     ETH_400G_LINK,
+    BrownoutModel,
+    FaultInjector,
+    GilbertElliott,
     LinkProfile,
     LinkReport,
     link_energy_w,
     simulate_shared_link,
 )
-from repro.camera.offload.payloads import WirePayload
+from repro.camera.offload.payloads import (
+    SESSION_SIDEBAND,
+    PayloadSchema,
+    WirePayload,
+)
+from repro.camera.offload.resilience import (
+    ON_NODE,
+    DegradationLadder,
+    DeliveryRecord,
+    OffloadSession,
+    fleet_link_report,
+    payload_checksum,
+)
 
 __all__ = [
     "BACKSCATTER",
+    "BrownoutModel",
     "ControllerReport",
     "CutController",
     "CutMeasurement",
+    "DegradationLadder",
+    "DeliveryRecord",
     "ETH_25G_LINK",
     "ETH_400G_LINK",
     "FaceAuthOffloadExecutor",
+    "FaultInjector",
+    "GilbertElliott",
     "LinkProfile",
     "LinkReport",
+    "ON_NODE",
+    "OffloadSession",
+    "PayloadSchema",
+    "SESSION_SIDEBAND",
     "VROffloadExecutor",
     "WirePayload",
+    "fleet_link_report",
     "link_energy_w",
+    "payload_checksum",
     "simulate_shared_link",
 ]

@@ -146,10 +146,57 @@ class CutController:
             self.executors[cut] = ex
             node_s, payload = _timed(lambda: ex.encode(*inputs), reps=reps)
             cloud_s, _res = _timed(lambda: ex.decode_run(payload), reps=reps)
-            self.measurements.append(CutMeasurement(
+            m = CutMeasurement(
                 cut=cut, node_s=node_s, cloud_s=cloud_s,
                 wire_bytes=payload.nbytes(),
-                capacity_bytes=payload.capacity_bytes(), units=units))
+                capacity_bytes=payload.capacity_bytes(), units=units)
+            self._check_finite(m)
+            self.measurements.append(m)
+        return self.measurements
+
+    @staticmethod
+    def _check_finite(m: CutMeasurement):
+        import math
+
+        for field in ("node_s", "cloud_s", "wire_bytes", "capacity_bytes"):
+            v = getattr(m, field)
+            if not (isinstance(v, (int, float)) and math.isfinite(v)
+                    and v >= 0):
+                raise ValueError(
+                    f"calibration for cut {m.cut!r} produced non-finite "
+                    f"{field}={v!r} — the executor's encode/decode_run is "
+                    "emitting NaN/inf (check codec bits and input ranges) "
+                    "and solve_cut would silently rank garbage")
+
+    def _validated_measurements(self) -> list:
+        """Calibration table checked before anything reaches solve_cut.
+
+        Raises a ``ValueError`` NAMING the offending cut for every hole a
+        bare ``KeyError`` (or a NaN objective) used to fall through:
+        missing measurement, missing hardware profile, a cut absent from
+        the analytic template, or a non-finite measured value."""
+        if not self.measurements:
+            raise RuntimeError("calibrate() first")
+        measured = {m.cut for m in self.measurements}
+        for cut in self.cuts:
+            if cut not in measured:
+                raise ValueError(
+                    f"no calibration entry for cut {cut!r} — "
+                    f"calibrate() measured only {sorted(measured)}; "
+                    "re-run calibrate() after changing self.cuts")
+        tmpl_names = {b.name for b in self.template.blocks}
+        for m in self.measurements:
+            self._check_finite(m)
+            if m.cut not in self.profiles:
+                raise ValueError(
+                    f"cut {m.cut!r} has a calibration entry but no "
+                    "HardwareProfile in controller.profiles — add one or "
+                    "drop the cut")
+            if m.cut not in tmpl_names:
+                raise ValueError(
+                    f"cut {m.cut!r} is not a block of the analytic "
+                    f"template {self.template.name!r} "
+                    f"(blocks: {sorted(tmpl_names)})")
         return self.measurements
 
     # -- 2. fit --------------------------------------------------------------
@@ -163,8 +210,7 @@ class CutController:
         node-time *deltas* under the block profile's rate (so
         ``HardwareProfile.time_for`` reproduces the measured stage time).
         """
-        if not self.measurements:
-            raise RuntimeError("calibrate() first")
+        self._validated_measurements()
         blocks = []
         frac = 1.0                       # upstream selectivity product
         prev_node = 0.0
@@ -207,6 +253,28 @@ class CutController:
         ex = self.executors[sol.cut_after]
         payload = ex.encode(*inputs)
         return ex.decode_run(payload), payload, sol
+
+    def degradation_ladder(self, *, bits_ladder=(16, 8, 4), **ladder_kw):
+        """Build the resilience ladder from this controller's calibration.
+
+        Rung 0 is the solver-chosen cut at the widest codec; faults walk
+        it down through narrower codecs, then retreat to the
+        measured-cheapest-bytes cut (the calibration table's own answer
+        to "which cut survives a starved link"), and finally to the
+        all-on-node terminal rung.  Raises the same cut-naming
+        ``ValueError`` family as :meth:`choose` on calibration holes.
+        """
+        from repro.camera.offload.resilience import ON_NODE, DegradationLadder
+
+        self._validated_measurements()
+        chosen = self.choose().cut_after
+        rungs = [(chosen, b) for b in bits_ladder]
+        cheapest = min(self.measurements,
+                       key=lambda m: m.bytes_per_unit).cut
+        if cheapest != chosen:
+            rungs.append((cheapest, bits_ladder[-1]))
+        rungs.append(ON_NODE)
+        return DegradationLadder(rungs, **ladder_kw)
 
     # -- 4. audit ------------------------------------------------------------
 

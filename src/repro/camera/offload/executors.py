@@ -44,7 +44,11 @@ import functools
 
 import numpy as np
 
-from repro.camera.offload.payloads import PayloadSchema, WirePayload
+from repro.camera.offload.payloads import (
+    SESSION_SIDEBAND_NAMES,
+    PayloadSchema,
+    WirePayload,
+)
 from repro.kernels.wire_codec.ops import (
     wire_bytes,
     wire_bytes_dynamic,
@@ -118,18 +122,22 @@ class FaceAuthOffloadExecutor:
     # Declared wire contract per cut (repro.analysis cross-checks these
     # against the avals _node_fn actually emits — see payloads.PayloadSchema)
     PAYLOAD_SCHEMA = {
-        "sensor": PayloadSchema(codec=("frames",)),
+        "sensor": PayloadSchema(codec=("frames",),
+                                session=SESSION_SIDEBAND_NAMES),
         "motion": PayloadSchema(codec=("mframes",),
                                 i32=("fidx", "motion_dropped"),
-                                bools=("motion",)),
+                                bools=("motion",),
+                                session=SESSION_SIDEBAND_NAMES),
         "vj": PayloadSchema(codec=("patches",),
                             i32=("wsel", "n_win", "win_dropped", "casc_drop",
                                  "fidx", "motion_dropped"),
-                            bools=("motion",)),
+                            bools=("motion",),
+                            session=SESSION_SIDEBAND_NAMES),
         "nn": PayloadSchema(codec=("scores",),
                             i32=("wsel", "n_win", "win_dropped", "casc_drop",
                                  "fidx", "motion_dropped"),
-                            bools=("motion", "auth")),
+                            bools=("motion", "auth"),
+                            session=SESSION_SIDEBAND_NAMES),
     }
 
     def __init__(self, base, cut: str, *, bits: int | None = None,
@@ -309,9 +317,12 @@ class VROffloadExecutor:
     CUTS = ("capture", "depth", "stitch")
 
     PAYLOAD_SCHEMA = {
-        "capture": PayloadSchema(codec=("lefts", "rights")),
-        "depth": PayloadSchema(codec=("depths", "lefts", "rights")),
-        "stitch": PayloadSchema(codec=("left_pano", "right_pano")),
+        "capture": PayloadSchema(codec=("lefts", "rights"),
+                                 session=SESSION_SIDEBAND_NAMES),
+        "depth": PayloadSchema(codec=("depths", "lefts", "rights"),
+                               session=SESSION_SIDEBAND_NAMES),
+        "stitch": PayloadSchema(codec=("left_pano", "right_pano"),
+                                session=SESSION_SIDEBAND_NAMES),
     }
 
     def __init__(self, base, cut: str, *, bits: int | None = None,

@@ -25,6 +25,19 @@ from __future__ import annotations
 
 import dataclasses
 
+# Session-layer sideband the resilience runtime staples onto EVERY wire
+# payload (resilience.OffloadSession): a monotone sequence number, an
+# integrity checksum over the payload bytes, and the retransmit-attempt
+# counter.  Declared here — not in resilience.py — so both offload
+# executor families and the analysis C006 pass share ONE spec without an
+# import cycle.  Each field is charged at 4 B per transmission attempt;
+# dtype discipline (uint32/int32, nothing wider, nothing float) is
+# enforced by repro.analysis pass C006.
+SESSION_SIDEBAND = (("seq", "uint32"), ("crc", "uint32"),
+                    ("attempt", "int32"))
+SESSION_SIDEBAND_NAMES = tuple(n for n, _ in SESSION_SIDEBAND)
+SESSION_SIDEBAND_BYTES = 4.0 * len(SESSION_SIDEBAND)
+
 
 def static_array_bytes(a) -> float:
     """Static wire size of one array: bools at 1 bit, else itemsize.
@@ -52,11 +65,19 @@ class PayloadSchema:
     cross-checks the declared fields against the avals the node half
     actually emits — an undeclared array is *uncharged padding on the
     wire* and fails analysis.
+
+    ``session`` declares the session-layer sideband (seq / checksum /
+    attempt counter) the resilience runtime adds per transmission —
+    host-side framing, never part of the node jit's output, but on the
+    wire and charged all the same.  Pass C006 checks the declaration
+    matches :data:`SESSION_SIDEBAND` name-for-name with uint32/int32
+    dtype discipline.
     """
 
     codec: tuple = ()
     i32: tuple = ()
     bools: tuple = ()
+    session: tuple = ()
 
     def declared(self, bits) -> set:
         """Full expected key set of the node-half ``arrays`` dict."""

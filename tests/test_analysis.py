@@ -286,6 +286,91 @@ class TestCutPass:
         res = CutPass().run(_cut_ctx(Exec, ("a",)))
         assert "C002" in _codes(res.findings)
 
+    # -- C006: session-layer sideband discipline ----------------------------
+
+    def test_undeclared_session_sideband_flagged(self):
+        """Single violation: a schema that never declares the seq/crc/
+        attempt sideband the resilience runtime charges per attempt."""
+        class Exec:
+            CUTS = ("a",)
+            PAYLOAD_SCHEMA = {"a": PayloadSchema(i32=("n",))}   # session=()
+
+            def _node_fn(self, x):
+                return ({"n": jnp.zeros((), jnp.int32)}, 0.0)
+
+        res = CutPass().run(_cut_ctx(Exec, ("a",)))
+        hits = [f for f in res.findings if f.code == "C006"]
+        assert {f.where for f in hits} == {"seq", "crc", "attempt"}
+        assert all("not declared" in f.message for f in hits)
+
+    def test_declared_session_sideband_quiet(self):
+        from repro.camera.offload.payloads import SESSION_SIDEBAND_NAMES
+
+        class Exec:
+            CUTS = ("a",)
+            PAYLOAD_SCHEMA = {"a": PayloadSchema(
+                i32=("n",), session=SESSION_SIDEBAND_NAMES)}
+
+            def _node_fn(self, x):
+                return ({"n": jnp.zeros((), jnp.int32)}, 0.0)
+
+        res = CutPass().run(_cut_ctx(Exec, ("a",)))
+        assert "C006" not in _codes(res.findings)
+
+    def test_unknown_session_field_flagged(self):
+        from repro.camera.offload.payloads import SESSION_SIDEBAND_NAMES
+
+        class Exec:
+            CUTS = ("a",)
+            PAYLOAD_SCHEMA = {"a": PayloadSchema(
+                session=SESSION_SIDEBAND_NAMES + ("hmac",))}
+
+            def _node_fn(self, x):
+                return ({}, 0.0)
+
+        res = CutPass().run(_cut_ctx(Exec, ("a",)))
+        hits = [f for f in res.findings if f.code == "C006"]
+        assert [f.where for f in hits] == ["hmac"]
+        assert "unknown sideband" in hits[0].message
+
+    def test_session_dtype_discipline_enforced_on_spec(self):
+        """A family whose session spec strays from int32/uint32 fails the
+        4 B/attempt charge contract even with names declared."""
+        from repro.analysis.registry import CutFamily
+
+        class Exec:
+            CUTS = ("a",)
+            PAYLOAD_SCHEMA = {"a": PayloadSchema(session=("seq",))}
+
+            def _node_fn(self, x):
+                return ({}, 0.0)
+
+        fam = CutFamily("synth_fam", Exec, lambda cut, bits: Exec(),
+                        lambda ex: (jnp.zeros((2,), jnp.float32),), ("a",),
+                        session_spec=(("seq", "float32"),))
+        ctx = PassContext(targets=[], cut_families=[fam], kernel_specs=[],
+                          kernel_missing=[], kernel_shapes={})
+        res = CutPass().run(ctx)
+        hits = [f for f in res.findings if f.code == "C006"]
+        assert hits and "int32/uint32 only" in hits[0].message
+
+    def test_session_name_collision_with_payload_flagged(self):
+        from repro.camera.offload.payloads import SESSION_SIDEBAND_NAMES
+
+        class Exec:
+            CUTS = ("a",)
+            PAYLOAD_SCHEMA = {"a": PayloadSchema(
+                i32=("seq",), session=SESSION_SIDEBAND_NAMES)}
+
+            def _node_fn(self, x):
+                # node half emits an array named like the session framing
+                return ({"seq": jnp.zeros((), jnp.int32)}, 0.0)
+
+        res = CutPass().run(_cut_ctx(Exec, ("a",)))
+        hits = [f for f in res.findings
+                if f.code == "C006" and "collides" in f.message]
+        assert [f.where for f in hits] == ["seq"]
+
 
 # ---------------------------------------------------------------------------
 # report / baseline mechanics

@@ -15,7 +15,7 @@ import tempfile
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SECTIONS = ("fa", "vr", "vj", "nn", "bssa", "detect", "fa_hotpath",
-            "offload", "analysis", "roofline")
+            "offload", "resilience", "analysis", "roofline")
 
 
 def test_benchmark_smoke_all_sections():
@@ -43,6 +43,15 @@ def test_benchmark_smoke_all_sections():
         assert orow["fa_knee_at_8bit"][0] == "True"
         assert "agrees=True" in orow["fa_controller_choice"][1]
         assert "agrees=True" in orow["vr_controller_choice"][1]
+        res = json.load(open(os.path.join(td, "BENCH_resilience.json")))
+        rrow = {r[1]: (r[2], r[3]) for r in res["rows"]}
+        assert rrow["zero_fault_bitexact"][0] == "1"
+        assert rrow["determinism"][0] == "1"
+        assert rrow["brownout_resume_exact"][0] == "1"
+        assert rrow["resume_not_recompute"][0] == "1"
+        # a faulty neighbor's retries must congest the shared uplink
+        assert (float(rrow["p99_congested_s"][0])
+                > float(rrow["p99_clean_s"][0]))
         ana = json.load(open(os.path.join(td, "BENCH_analysis.json")))
         arow = {r[1]: r[2] for r in ana["rows"]}
         assert arow["non_baselined"] == "0"

@@ -1,0 +1,127 @@
+"""ckpt/checkpoint.py coverage: the brownout-recovery substrate.
+
+The resilience runtime (DESIGN.md §12) commits funnel stage state through
+these primitives, so their contracts — atomic save, round-tripped extra
+metadata, torn-save immunity, keep-N pruning — are load-bearing for fault
+recovery, not just for training restarts.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.ckpt.checkpoint import (
+    latest_step,
+    prune_old,
+    restore_checkpoint,
+    save_checkpoint,
+)
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "frames": rng.normal(size=(4, 8, 8)).astype(np.float32),
+        "fidx": np.arange(4, dtype=np.int32),
+        "valid": np.array([True, False, True, True]),
+        "nested": {"w": rng.normal(size=(3, 2)).astype(np.float32)},
+    }
+
+
+class TestRoundTrip:
+    def test_save_restore_round_trip_with_extra(self, tmp_path):
+        tree = _tree(1)
+        extra = {"stage": "gather", "seq": 7}
+        path = save_checkpoint(str(tmp_path), 3, tree, extra=extra)
+        assert os.path.isdir(path) and not path.endswith(".tmp")
+        got, got_extra = restore_checkpoint(str(tmp_path), 3, tree)
+        assert got_extra == extra
+        for k in ("frames", "fidx", "valid"):
+            assert np.array_equal(np.asarray(got[k]), tree[k]), k
+        assert np.array_equal(np.asarray(got["nested"]["w"]),
+                              tree["nested"]["w"])
+
+    def test_restore_casts_to_like_tree_dtype(self, tmp_path):
+        tree = {"x": np.arange(6, dtype=np.float32)}
+        save_checkpoint(str(tmp_path), 0, tree)
+        got, _ = restore_checkpoint(str(tmp_path), 0, tree)
+        assert np.asarray(got["x"]).dtype == np.float32
+
+    def test_restore_rejects_shape_drift(self, tmp_path):
+        save_checkpoint(str(tmp_path), 0, {"x": np.zeros((4,))})
+        with pytest.raises(ValueError, match="shape drift"):
+            restore_checkpoint(str(tmp_path), 0, {"x": np.zeros((5,))})
+
+    def test_restore_missing_leaf_is_a_keyerror(self, tmp_path):
+        save_checkpoint(str(tmp_path), 0, {"x": np.zeros((2,))})
+        with pytest.raises(KeyError, match="missing leaf"):
+            restore_checkpoint(str(tmp_path), 0,
+                               {"x": np.zeros((2,)), "y": np.zeros((2,))})
+
+
+class TestLatestStep:
+    def test_empty_dir_is_none(self, tmp_path):
+        assert latest_step(str(tmp_path)) is None
+
+    def test_nonexistent_dir_is_none(self, tmp_path):
+        assert latest_step(str(tmp_path / "nope")) is None
+
+    def test_ignores_torn_tmp_saves(self, tmp_path):
+        save_checkpoint(str(tmp_path), 1, _tree())
+        # a crash mid-save leaves a .tmp dir with no rename — must not win
+        os.makedirs(str(tmp_path / "step_00000009.tmp"))
+        assert latest_step(str(tmp_path)) == 1
+
+    def test_ignores_dir_without_manifest(self, tmp_path):
+        save_checkpoint(str(tmp_path), 2, _tree())
+        # renamed dir whose manifest never landed (corrupt save)
+        os.makedirs(str(tmp_path / "step_00000005"))
+        assert latest_step(str(tmp_path)) == 2
+
+    def test_newest_complete_manifest_wins(self, tmp_path):
+        for s in (1, 4, 2):
+            save_checkpoint(str(tmp_path), s, _tree(s))
+        assert latest_step(str(tmp_path)) == 4
+
+
+class TestPruneOld:
+    def test_keep_n_preserves_newest(self, tmp_path):
+        for s in range(6):
+            save_checkpoint(str(tmp_path), s, _tree(s))
+        prune_old(str(tmp_path), keep=2)
+        assert latest_step(str(tmp_path)) == 5
+        kept = sorted(d for d in os.listdir(str(tmp_path))
+                      if d.startswith("step_"))
+        assert kept == ["step_00000004", "step_00000005"]
+        # survivors still restore
+        got, _ = restore_checkpoint(str(tmp_path), 5, _tree())
+        assert np.array_equal(np.asarray(got["fidx"]),
+                              np.arange(4, dtype=np.int32))
+
+    def test_prune_missing_dir_is_noop(self, tmp_path):
+        prune_old(str(tmp_path / "never"), keep=3)
+
+    def test_prune_skips_torn_saves(self, tmp_path):
+        for s in range(3):
+            save_checkpoint(str(tmp_path), s, _tree(s))
+        os.makedirs(str(tmp_path / "step_00000007.tmp"))
+        prune_old(str(tmp_path), keep=1)
+        assert latest_step(str(tmp_path)) == 2
+        assert os.path.isdir(str(tmp_path / "step_00000007.tmp"))
+
+
+class TestAtomicity:
+    def test_resave_same_step_replaces(self, tmp_path):
+        save_checkpoint(str(tmp_path), 0, {"x": np.zeros((2,))})
+        save_checkpoint(str(tmp_path), 0, {"x": np.ones((2,))})
+        got, _ = restore_checkpoint(str(tmp_path), 0, {"x": np.zeros((2,))})
+        assert np.array_equal(np.asarray(got["x"]), np.ones((2,)))
+
+    def test_manifest_records_leaves(self, tmp_path):
+        path = save_checkpoint(str(tmp_path), 1, _tree())
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        names = {l["name"] for l in manifest["leaves"]}
+        assert {"frames", "fidx", "valid", "nested/w"} <= names

@@ -1,0 +1,667 @@
+"""Fault-injected offload runtime (DESIGN.md §12).
+
+Covers the PR-5 pinning contract (zero-fault sessions bit-exact with the
+split executors at every cut x bits), the fault models' determinism and
+stationary statistics, retransmission byte/energy charging, brownout
+recovery from stage-boundary commit points, the degradation ladder, and
+the calibration-validation satellites on CutController and the link.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from hypothesis_compat import given, settings, st
+
+from repro.camera.offload import (
+    BACKSCATTER,
+    ON_NODE,
+    BrownoutModel,
+    CutController,
+    DegradationLadder,
+    DeliveryRecord,
+    FaceAuthOffloadExecutor,
+    FaultInjector,
+    GilbertElliott,
+    LinkProfile,
+    OffloadSession,
+    VROffloadExecutor,
+    WirePayload,
+    fleet_link_report,
+    payload_checksum,
+    simulate_shared_link,
+)
+from repro.camera.offload.payloads import SESSION_SIDEBAND_BYTES
+from repro.camera.pipelines import FaceAuthExecutor
+from repro.core.costmodel import HardwareProfile
+from repro.core.pipeline import linear_pipeline
+
+FA_CUTS = FaceAuthOffloadExecutor.CUTS
+ALL_BITS = (None, 4, 8, 16)
+_RESULT_FIELDS = ("motion", "n_windows", "n_auth", "scores", "window_id",
+                  "window_valid", "auth", "windows_dropped",
+                  "motion_dropped", "cascade_dropped")
+
+
+@pytest.fixture(scope="module")
+def fa_setup():
+    from benchmarks.workloads import fa_cascade, fa_scan
+    from repro.camera.face_nn import train_face_nn
+    from repro.camera.synthetic import face_dataset, security_video
+
+    frames, _truth = security_video(n_frames=10, motion_frames=5, seed=1)
+    casc = fa_cascade(smoke=True)
+    X, y, _ = face_dataset(n_per_class=80, seed=3)
+    nn = train_face_nn(X, y, steps=60)
+    sf, stp, ad = fa_scan(True)
+    ex = FaceAuthExecutor(casc, nn, frames.shape[1], frames.shape[2],
+                          scale_factor=sf, step=stp, adaptive=ad)
+    ex.calibrate(frames)
+    fj = jnp.asarray(frames)
+    base = ex(fj)
+    offs = {(cut, bits): FaceAuthOffloadExecutor(ex, cut, bits=bits)
+            for cut in FA_CUTS for bits in ALL_BITS}
+    return ex, fj, base, offs
+
+
+def _assert_result_equal(a, b, fields=_RESULT_FIELDS):
+    for f in fields:
+        assert np.array_equal(np.asarray(getattr(a, f)),
+                              np.asarray(getattr(b, f))), f
+
+
+# ---------------------------------------------------------------------------
+# fault models
+# ---------------------------------------------------------------------------
+
+
+class TestGilbertElliott:
+    def test_stationary_closed_form(self):
+        ge = GilbertElliott(p_gb=0.1, p_bg=0.4)
+        assert ge.stationary_bad == pytest.approx(0.2)
+        assert ge.stationary_loss == pytest.approx(0.2)
+        assert ge.mean_burst_len == pytest.approx(2.5)
+
+    def test_rejects_non_probabilities(self):
+        for bad in (-0.1, 1.5, float("nan")):
+            with pytest.raises(ValueError, match="probability"):
+                GilbertElliott(p_gb=bad)
+
+    @settings(deadline=None, max_examples=5)
+    @given(st.floats(min_value=0.05, max_value=0.95),
+           st.floats(min_value=0.05, max_value=0.95),
+           st.integers(min_value=0, max_value=10_000))
+    def test_empirical_loss_converges_to_stationary(self, p_gb, p_bg, seed):
+        """Property: the injector's long-run loss rate is the analytic
+        stationary rate of its two-state chain (the satellite anchor)."""
+        ge = GilbertElliott(p_gb=p_gb, p_bg=p_bg)
+        inj = FaultInjector(loss=ge, seed=seed)
+        n = 20_000
+        for _ in range(n):
+            inj.attempt(0.0)
+        # burst correlation inflates the variance of the empirical mean:
+        # correlation time ~ 1/p_bg + 1/p_gb <= 40 attempts here
+        assert inj.attempts == n
+        assert abs(inj.empirical_loss - ge.stationary_loss) < 0.08
+
+    def test_seed_determinism(self):
+        ge = GilbertElliott(p_gb=0.2, p_bg=0.3)
+        a = FaultInjector(loss=ge, corrupt_fraction=0.4, seed=9)
+        b = FaultInjector(loss=ge, corrupt_fraction=0.4, seed=9)
+        seq_a = [a.attempt(i * 0.1) for i in range(200)]
+        seq_b = [b.attempt(i * 0.1) for i in range(200)]
+        assert seq_a == seq_b
+        a.reset()
+        assert [a.attempt(i * 0.1) for i in range(200)] == seq_a
+
+
+class TestOutageAndBrownout:
+    def test_outage_occupies_tail_of_period(self):
+        inj = FaultInjector(outage_period_s=10.0, outage_duty=0.2)
+        assert not inj.outage_at(0.0)
+        assert not inj.outage_at(7.9)
+        assert inj.outage_at(8.1)
+        assert inj.next_outage_end(8.1) == pytest.approx(10.0)
+        assert inj.attempt(8.1) in ("lost", "corrupt")
+        assert inj.attempt(10.1) == "ok"
+
+    def test_brownout_model_validation(self):
+        with pytest.raises(ValueError, match="load_w"):
+            BrownoutModel(harvest_w=2e-4, load_w=1e-4)
+        with pytest.raises(ValueError, match="finite and positive"):
+            BrownoutModel(storage_j=0.0)
+
+    def test_power_schedule_alternates_deterministically(self):
+        bo = BrownoutModel(harvest_w=15e-6, storage_j=13e-6, load_w=200e-6,
+                           jitter=0.0)
+        inj = FaultInjector(brownout=bo, seed=4)
+        powered0, b0 = inj.power_window(0.0)
+        assert powered0 and b0 == pytest.approx(bo.on_s)
+        powered1, b1 = inj.power_window(b0)
+        assert not powered1
+        assert b1 == pytest.approx(bo.on_s + bo.recharge_s)
+        inj2 = FaultInjector(brownout=BrownoutModel(
+            harvest_w=15e-6, storage_j=13e-6, load_w=200e-6, jitter=0.3),
+            seed=4)
+        edges_a = [inj2.power_window(t)[1] for t in np.linspace(0, 5, 7)]
+        inj2.reset()
+        edges_b = [inj2.power_window(t)[1] for t in np.linspace(0, 5, 7)]
+        assert edges_a == edges_b
+
+    def test_no_brownout_means_always_powered(self):
+        inj = FaultInjector(seed=0)
+        assert inj.power_window(123.0) == (True, float("inf"))
+
+
+# ---------------------------------------------------------------------------
+# link validation satellites
+# ---------------------------------------------------------------------------
+
+
+class TestLinkValidation:
+    def test_scaled_rejects_nonpositive_factor(self):
+        for bad in (0.0, -2.0, float("nan")):
+            with pytest.raises(ValueError, match="finite positive"):
+                BACKSCATTER.scaled(bad)
+
+    def test_scaled_error_points_at_fault_injector(self):
+        with pytest.raises(ValueError, match="FaultInjector"):
+            BACKSCATTER.scaled(0.0)
+
+    def test_scaled_valid_factor_still_works(self):
+        assert BACKSCATTER.scaled(2.0).bytes_per_s == pytest.approx(
+            2 * BACKSCATTER.bytes_per_s)
+
+    def test_simulator_rejects_negative_period(self):
+        tr = np.array([[100.0, 100.0]])
+        with pytest.raises(ValueError, match="frame_period_s"):
+            simulate_shared_link(tr, BACKSCATTER, frame_period_s=-1.0)
+        with pytest.raises(ValueError, match="raise duty"):
+            simulate_shared_link(tr, BACKSCATTER,
+                                 frame_period_s=float("nan"))
+
+
+# ---------------------------------------------------------------------------
+# controller calibration validation satellites
+# ---------------------------------------------------------------------------
+
+
+class _FakeSplitExec:
+    def __init__(self, cut, wire_bytes):
+        self.cut = cut
+        self.bits = 8
+        self._b = float(wire_bytes)
+
+    def encode(self, frames):
+        return WirePayload(cut=self.cut, bits=8,
+                           arrays={"x": jnp.zeros((1,))}, meta={},
+                           wire_b=jnp.asarray(self._b, jnp.float32))
+
+    def decode_run(self, payload):
+        return jnp.zeros(())
+
+
+def _toy_controller(wire, profiles=None, **kw):
+    template = linear_pipeline("toy", [
+        dict(name="src", flops=0, bytes_in=0, bytes_out=1000, kind="source"),
+        dict(name="filt", flops=1e3, bytes_in=1000, bytes_out=200,
+             kind="optional", selectivity=0.5),
+        dict(name="heavy", flops=1e6, bytes_in=200, bytes_out=10),
+    ])
+    if profiles is None:
+        profiles = {
+            "src": HardwareProfile("s", p_active_w=10e-6, p_leak_w=10e-6),
+            "filt": HardwareProfile("f", flops_per_s=1e6, p_active_w=20e-6,
+                                    p_leak_w=5e-6),
+            "heavy": HardwareProfile("h", flops_per_s=1e6, p_active_w=100e-6,
+                                     p_leak_w=50e-6),
+        }
+    link = LinkProfile("rf", bytes_per_s=1e4, joules_per_byte=1e-7)
+    return CutController(
+        lambda cut: _FakeSplitExec(cut, wire[cut]),
+        cuts=("src", "filt", "heavy"), template=template,
+        profiles=profiles, link=link, **kw)
+
+
+class TestControllerValidation:
+    WIRE = {"src": 1000.0, "filt": 120.0, "heavy": 7.0}
+
+    def test_missing_profile_names_the_cut(self):
+        ctl = _toy_controller(self.WIRE)
+        ctl.calibrate(jnp.zeros((4, 2, 2)))
+        del ctl.profiles["filt"]
+        with pytest.raises(ValueError, match="'filt'.*no\\s+HardwareProfile"):
+            ctl.choose()
+
+    def test_missing_measurement_names_the_cut(self):
+        ctl = _toy_controller(self.WIRE)
+        ctl.calibrate(jnp.zeros((4, 2, 2)))
+        ctl.cuts = ("src", "filt", "heavy", "ghost")
+        with pytest.raises(ValueError,
+                           match="no calibration entry for cut 'ghost'"):
+            ctl.choose()
+
+    def test_nonfinite_calibration_names_the_cut(self):
+        ctl = _toy_controller(dict(self.WIRE, filt=float("nan")))
+        with pytest.raises(ValueError, match="'filt'.*non-finite"):
+            ctl.calibrate(jnp.zeros((4, 2, 2)))
+
+    def test_tampered_measurement_caught_by_choose(self):
+        ctl = _toy_controller(self.WIRE)
+        ctl.calibrate(jnp.zeros((4, 2, 2)))
+        ctl.measurements[1] = dataclasses.replace(
+            ctl.measurements[1], node_s=float("inf"))
+        with pytest.raises(ValueError, match="'filt'.*node_s"):
+            ctl.choose()
+
+    def test_clean_calibration_still_chooses(self):
+        ctl = _toy_controller(self.WIRE, regime="energy")
+        ctl.calibrate(jnp.zeros((4, 2, 2)))
+        assert ctl.choose().cut_after in ("src", "filt", "heavy")
+
+    def test_degradation_ladder_shape(self):
+        ctl = _toy_controller(self.WIRE, regime="energy")
+        ctl.calibrate(jnp.zeros((4, 2, 2)))
+        ladder = ctl.degradation_ladder()
+        chosen = ctl.choose().cut_after
+        assert ladder.rungs[0] == (chosen, 16)
+        assert ladder.rungs[-1] == ON_NODE
+        # the measured-cheapest cut is on the ladder before on_node
+        assert any(r[0] == "heavy" for r in ladder.rungs[:-1])
+
+
+# ---------------------------------------------------------------------------
+# sessions: zero-fault pinning
+# ---------------------------------------------------------------------------
+
+
+class TestZeroFaultPinning:
+    @pytest.mark.parametrize("cut", FA_CUTS)
+    @pytest.mark.parametrize("bits", ALL_BITS)
+    def test_bitexact_with_split_executor(self, fa_setup, cut, bits):
+        """Acceptance: faults disabled => OffloadSession output is
+        bit-exact with the PR-5 split executor at every cut x bits."""
+        ex, fj, base, offs = fa_setup
+        off = offs[(cut, bits)]
+        want, payload = off(fj)
+        sess = OffloadSession(off, link=BACKSCATTER)
+        got, rec = sess.send(fj)
+        _assert_result_equal(want, got)
+        assert rec.delivered and rec.attempts == 1 and rec.lost == 0
+        assert rec.payload_bytes == pytest.approx(
+            payload.nbytes() + SESSION_SIDEBAND_BYTES)
+        assert rec.bytes_on_air == pytest.approx(rec.payload_bytes)
+
+    def test_disabled_injector_identical_to_no_injector(self, fa_setup):
+        """Satellite: zero-fault injection byte-identical to no injector."""
+        ex, fj, base, offs = fa_setup
+        off = offs[("nn", 8)]
+        s_none = OffloadSession(off, link=BACKSCATTER)
+        s_disabled = OffloadSession(off, link=BACKSCATTER,
+                                    injector=FaultInjector(seed=123))
+        for _ in range(3):
+            r_none, _ = s_none.send(fj)
+            r_dis, _ = s_disabled.send(fj)
+        _assert_result_equal(r_none, r_dis)
+        assert [dataclasses.asdict(r) for r in s_none.records] == \
+               [dataclasses.asdict(r) for r in s_disabled.records]
+        assert np.array_equal(s_none.attempt_trace(),
+                              s_disabled.attempt_trace())
+
+    def test_receiver_sideband_contract(self, fa_setup):
+        ex, fj, base, offs = fa_setup
+        off = offs[("nn", 8)]
+        sess = OffloadSession(off, link=BACKSCATTER)
+        for _ in range(3):
+            sess.send(fj)
+        seqs = [int(sb["seq"]) for sb in sess.received]
+        assert seqs == [0, 1, 2] and sess.seq_gaps() == []
+        sb = sess.received[0]
+        assert sb["seq"].dtype == np.uint32
+        assert sb["crc"].dtype == np.uint32
+        assert sb["attempt"].dtype == np.int32
+        assert int(sb["crc"]) == payload_checksum(off.encode(fj))
+
+
+# ---------------------------------------------------------------------------
+# sessions: faults charged for real
+# ---------------------------------------------------------------------------
+
+
+class TestFaultedDelivery:
+    def test_retries_charge_bytes_and_congest_the_trace(self, fa_setup):
+        ex, fj, base, offs = fa_setup
+        off = offs[("nn", 8)]
+        inj = FaultInjector(loss=GilbertElliott(p_gb=0.4, p_bg=0.4), seed=7)
+        sess = OffloadSession(off, link=BACKSCATTER, injector=inj)
+        clean = OffloadSession(off, link=BACKSCATTER)
+        for _ in range(12):
+            sess.send(fj)
+            clean.send(fj)
+        retrans = sum(r.attempts - 1 for r in sess.records)
+        assert retrans > 0
+        assert sess.bytes_on_air == pytest.approx(sum(
+            r.attempts * r.payload_bytes for r in sess.records))
+        assert sess.bytes_on_air > clean.bytes_on_air
+        # every retransmission re-enters the shared-link trace
+        assert float(sess.attempt_trace().sum()) > \
+            float(clean.attempt_trace().sum())
+        # and session latency paid the timeouts + backoff
+        assert sess.now > clean.now
+
+    def test_fault_sweep_is_deterministic_under_seed(self, fa_setup):
+        ex, fj, base, offs = fa_setup
+        off = offs[("nn", 8)]
+        inj = FaultInjector(loss=GilbertElliott(p_gb=0.3, p_bg=0.3),
+                            corrupt_fraction=0.4, seed=11)
+        runs = []
+        for _ in range(2):
+            inj.reset()
+            sess = OffloadSession(off, link=BACKSCATTER, injector=inj)
+            for _ in range(10):
+                sess.send(fj)
+            runs.append([dataclasses.asdict(r) for r in sess.records])
+        assert runs[0] == runs[1]
+
+    def test_corruption_is_detected_not_timed_out(self, fa_setup):
+        """A corrupt delivery pays the full transmit + a NACK round trip,
+        never the sender timeout — the checksum is what catches it."""
+        ex, fj, base, offs = fa_setup
+        off = offs[("nn", 8)]
+        ge = GilbertElliott(p_gb=0.0, p_bg=1.0, loss_good=1.0)
+        inj = FaultInjector(loss=ge, corrupt_fraction=1.0, seed=3)
+        sess = OffloadSession(off, link=BACKSCATTER, injector=inj,
+                              max_retries=2)
+        got, rec = sess.send(fj)
+        assert rec.corrupt == rec.attempts and rec.lost == 0
+        assert not rec.delivered and got is None
+        assert sess.seq_gaps() == [0] or sess.received == []
+
+    def test_exhausted_retries_leave_a_seq_gap(self, fa_setup):
+        ex, fj, base, offs = fa_setup
+        off = offs[("nn", 8)]
+        inj = FaultInjector(loss=GilbertElliott(p_gb=1.0, p_bg=0.0,
+                                                loss_good=1.0), seed=0)
+        sess = OffloadSession(off, link=BACKSCATTER, injector=inj,
+                              max_retries=1)
+        got, rec = sess.send(fj)
+        assert got is None and not rec.delivered
+        assert rec.attempts == 2    # first try + one retry
+        assert rec.bytes_on_air == pytest.approx(2 * rec.payload_bytes)
+
+
+# ---------------------------------------------------------------------------
+# brownout recovery from commit points
+# ---------------------------------------------------------------------------
+
+
+class TestBrownoutRecovery:
+    def test_resumes_from_last_commit_not_capture(self, fa_setup, tmp_path):
+        """Acceptance: a brownout mid-funnel restores the last committed
+        stage and re-enters there — upstream stages run exactly once."""
+        ex, fj, base, offs = fa_setup
+        off = offs[("nn", 8)]
+        want, _ = off(fj)
+        bo = BrownoutModel(harvest_w=15e-6, storage_j=13e-6, load_w=200e-6,
+                           jitter=0.0)     # on-window ~0.07 s < 5 x 0.02 s
+        inj = FaultInjector(brownout=bo, seed=5)
+        sess = OffloadSession(off, link=BACKSCATTER, injector=inj,
+                              ckpt_dir=str(tmp_path), stage_cost_s=0.02)
+        got, rec = sess.send(fj)
+        assert rec.brownouts >= 1 and rec.restores >= 1
+        assert rec.recovery_s > 0
+        # the funnel prefix upstream of the brownout was NOT recomputed
+        assert sess.stage_completed["motion"] == 1
+        assert sess.stage_completed["detect"] == 1
+        assert sess.stage_completed["gather"] == 1
+        assert sess.stage_started["nn"] == rec.brownouts + 1
+        # and the staged, recovered result equals the fused split executor
+        _assert_result_equal(want, got)
+
+    def test_second_send_reuses_runner_and_recovers_again(self, fa_setup,
+                                                          tmp_path):
+        ex, fj, base, offs = fa_setup
+        off = offs[("nn", 8)]
+        want, _ = off(fj)
+        bo = BrownoutModel(harvest_w=15e-6, storage_j=13e-6, load_w=200e-6,
+                           jitter=0.0)
+        inj = FaultInjector(brownout=bo, seed=5)
+        sess = OffloadSession(off, link=BACKSCATTER, injector=inj,
+                              ckpt_dir=str(tmp_path), stage_cost_s=0.02)
+        for _ in range(2):
+            got, rec = sess.send(fj)
+            _assert_result_equal(want, got)
+        assert sess.records[1].brownouts >= 1
+
+    def test_commit_points_live_in_the_checkpoint_store(self, fa_setup,
+                                                        tmp_path):
+        from repro.ckpt.checkpoint import latest_step
+
+        ex, fj, base, offs = fa_setup
+        off = offs[("vj", 8)]
+        bo = BrownoutModel(harvest_w=15e-6, storage_j=20e-6, load_w=200e-6,
+                           jitter=0.0)
+        inj = FaultInjector(brownout=bo, seed=2)
+        sess = OffloadSession(off, link=BACKSCATTER, injector=inj,
+                              ckpt_dir=str(tmp_path), stage_cost_s=0.02)
+        sess.send(fj)
+        step = latest_step(str(tmp_path))
+        assert step is not None
+        # the newest commit is the vj cut's last stage, tagged with its seq
+        import json
+        import os
+        with open(os.path.join(str(tmp_path), f"step_{step:08d}",
+                               "manifest.json")) as f:
+            extra = json.load(f)["extra"]
+        assert extra["stage"] == "gather" and extra["seq"] == 0
+
+
+# ---------------------------------------------------------------------------
+# degradation ladder
+# ---------------------------------------------------------------------------
+
+
+def _rec(seq, attempts=1, delivered=True, fallback=False, latency=0.01):
+    return DeliveryRecord(
+        seq=seq, cut="nn", bits=16, delivered=delivered, fallback=fallback,
+        attempts=attempts, lost=attempts - 1, corrupt=0, payload_bytes=100.0,
+        bytes_on_air=100.0 * attempts, compute_s=0.0, latency_s=latency,
+        energy_j=0.0, brownouts=0, restores=0, recovery_s=0.0)
+
+
+class TestDegradationLadderPolicy:
+    RUNGS = [("nn", 16), ("nn", 8), ("nn", 4), ON_NODE]
+
+    def test_zero_fault_never_moves(self):
+        lad = DegradationLadder(self.RUNGS, window=4)
+        for i in range(50):
+            lad.observe(_rec(i))
+        assert lad.level == 0 and lad.transitions == []
+
+    def test_delivery_failure_descends_immediately(self):
+        lad = DegradationLadder(self.RUNGS)
+        lad.observe(_rec(0, delivered=False))
+        assert lad.rung == ("nn", 8)
+        lad.observe(_rec(1, delivered=False))
+        lad.observe(_rec(2, delivered=False))
+        lad.observe(_rec(3, delivered=False))   # clamps at terminal
+        assert lad.rung == ON_NODE
+
+    def test_sustained_retries_descend(self):
+        lad = DegradationLadder(self.RUNGS, window=4, max_retry_frac=0.3)
+        for i in range(4):
+            lad.observe(_rec(i, attempts=3))
+        assert lad.level == 1
+
+    def test_clean_streak_recovers_with_hysteresis(self):
+        lad = DegradationLadder(self.RUNGS, window=4, recover_after=6)
+        lad.observe(_rec(0, delivered=False))
+        assert lad.level == 1
+        for i in range(1, 6):
+            lad.observe(_rec(i))
+        assert lad.level == 1                   # not yet: hysteresis
+        lad.observe(_rec(6))
+        assert lad.level == 0
+        assert lad.transitions == [(0, 0, 1), (6, 1, 0)]
+
+    def test_deadline_breaches_descend(self):
+        lad = DegradationLadder(self.RUNGS, window=4, deadline_s=0.1,
+                                max_retry_frac=0.9)
+        for i in range(4):
+            lad.observe(_rec(i, latency=0.5))
+        assert lad.level == 1
+
+    def test_duplicate_rungs_rejected(self):
+        with pytest.raises(ValueError, match="duplicate"):
+            DegradationLadder([("nn", 8), ("nn", 8)])
+
+
+class TestLadderEndToEnd:
+    def test_ladder_absorbs_10pct_burst_loss_within_bounds(self, fa_setup):
+        """Acceptance: <=10% burst loss on BACKSCATTER => auth decisions
+        within 2% flipped vs fault-free, energy under fault-free x1.5."""
+        ex, fj, base, offs = fa_setup
+        make = lambda cut, bits: offs[(cut, bits)]    # noqa: E731
+        rungs = [("nn", 16), ("nn", 8), ("nn", 4), ON_NODE]
+        n_sends = 30
+
+        def run(injector):
+            sess = OffloadSession(
+                make_executor=make, cut="nn", bits=16, link=BACKSCATTER,
+                injector=injector, ladder=DegradationLadder(list(rungs)),
+                on_node_fn=lambda f: ex(f))
+            auths = []
+            for _ in range(n_sends):
+                got, rec = sess.send(fj)
+                assert got is not None          # ladder never drops a frame
+                auths.append(np.asarray(got.auth))
+            return sess, auths
+
+        base_sess, base_auth = run(None)
+        # stationary loss = 0.05 / (0.05 + 0.45) = 10%, mean burst 2.2
+        ge = GilbertElliott(p_gb=0.05, p_bg=0.45)
+        faulty_sess, faulty_auth = run(FaultInjector(loss=ge, seed=21))
+        flipped = np.mean([np.mean(a != b)
+                           for a, b in zip(base_auth, faulty_auth)])
+        assert flipped <= 0.02, f"flipped {flipped:.3%} of auth decisions"
+        assert faulty_sess.energy_j <= 1.5 * base_sess.energy_j
+        # and the faults were real: retransmissions actually happened
+        assert sum(r.attempts - 1 for r in faulty_sess.records) > 0
+
+    def test_hard_faults_walk_down_to_on_node(self, fa_setup):
+        """Retries exhausted send after send: the ladder must reach the
+        terminal rung and the on-node fallback must deliver exact
+        (fused-executor) decisions."""
+        ex, fj, base, offs = fa_setup
+        make = lambda cut, bits: offs[(cut, bits)]    # noqa: E731
+        # long deep fades: mostly-bad chain
+        ge = GilbertElliott(p_gb=0.9, p_bg=0.1)
+        inj = FaultInjector(loss=ge, seed=13)
+        sess = OffloadSession(
+            make_executor=make, cut="nn", bits=16, link=BACKSCATTER,
+            injector=inj, max_retries=0,
+            ladder=DegradationLadder(
+                [("nn", 16), ("nn", 8), ("nn", 4), ON_NODE]),
+            on_node_fn=lambda f: ex(f))
+        results = [sess.send(fj) for _ in range(12)]
+        assert sess.ladder.rung == ON_NODE
+        fallbacks = [r for res, r in results if r.fallback and r.delivered]
+        assert fallbacks, "no fallback delivery ever made it through"
+        for res, r in results:
+            if r.fallback and r.delivered:
+                _assert_result_equal(base, res)
+        # sends made AT the terminal rung ship only the decision —
+        # orders of magnitude below the nn cut's payload
+        terminal = [r for res, r in results if r.cut == "on_node"]
+        assert terminal
+        assert all(r.payload_bytes < 100 for r in terminal)
+
+
+# ---------------------------------------------------------------------------
+# congestion re-entry
+# ---------------------------------------------------------------------------
+
+
+class TestFleetCongestion:
+    def test_retries_congest_neighboring_streams(self, fa_setup):
+        ex, fj, base, offs = fa_setup
+        off = offs[("nn", 8)]
+
+        def fleet(with_faults):
+            sessions = []
+            for s in range(3):
+                inj = (FaultInjector(loss=GilbertElliott(p_gb=0.5, p_bg=0.3),
+                                     seed=s) if with_faults and s == 0
+                       else None)
+                sess = OffloadSession(off, link=BACKSCATTER, injector=inj)
+                for _ in range(6):
+                    sess.send(fj)
+                sessions.append(sess)
+            # globally-triggered rig: streams contend in every frame slot,
+            # so queueing behind stream 0's retries is structural rather
+            # than dependent on whether one burst outlasts the stagger gap
+            return fleet_link_report(sessions, BACKSCATTER,
+                                     frame_period_s=1.0, stagger=False)
+
+        clean = fleet(False)
+        congested = fleet(True)
+        assert congested.bytes_total > clean.bytes_total
+        # stream 0's retries queue against streams 1 and 2
+        assert congested.latency_s[1:].max() > clean.latency_s[1:].max()
+        assert congested.p99_latency_s >= clean.p99_latency_s
+
+    def test_empty_sessions_rejected(self):
+        with pytest.raises(ValueError, match="no sends"):
+            fleet_link_report(
+                [OffloadSession(_FakeSplitExec("src", 10.0),
+                                link=BACKSCATTER)],
+                BACKSCATTER, frame_period_s=1.0)
+
+
+# ---------------------------------------------------------------------------
+# VR sessions
+# ---------------------------------------------------------------------------
+
+
+class TestVRSessions:
+    @pytest.fixture(scope="class")
+    def vr_setup(self):
+        from repro.camera.bssa import GridSpec
+        from repro.camera.pipelines import VRRigExecutor
+        from repro.camera.synthetic import stereo_pair
+
+        views = [stereo_pair(h=48, w=64, max_disp=4, seed=2 + s)[:2]
+                 for s in range(2)]
+        lefts = jnp.stack([v[0] for v in views])
+        rights = jnp.stack([v[1] for v in views])
+        base = VRRigExecutor(GridSpec(sigma_spatial=8), max_disp=4,
+                             n_iters=2, rig_parallel=False)
+        return base, lefts, rights
+
+    @pytest.mark.parametrize("cut", VROffloadExecutor.CUTS)
+    def test_zero_fault_bitexact(self, vr_setup, cut):
+        base, lefts, rights = vr_setup
+        off = VROffloadExecutor(base, cut, bits=8)
+        (lp0, rp0), _ = off(lefts, rights)
+        sess = OffloadSession(off, link=BACKSCATTER)
+        (lp, rp), rec = sess.send(lefts, rights)
+        assert np.array_equal(np.asarray(lp0), np.asarray(lp))
+        assert np.array_equal(np.asarray(rp0), np.asarray(rp))
+        assert rec.delivered
+
+    def test_vr_brownout_recovery(self, vr_setup, tmp_path):
+        base, lefts, rights = vr_setup
+        off = VROffloadExecutor(base, "stitch", bits=8)
+        (lp0, rp0), _ = off(lefts, rights)
+        bo = BrownoutModel(harvest_w=15e-6, storage_j=9e-6, load_w=200e-6,
+                           jitter=0.0)     # on ~0.049 s < 3 x 0.02 s
+        inj = FaultInjector(brownout=bo, seed=6)
+        sess = OffloadSession(off, link=BACKSCATTER, injector=inj,
+                              ckpt_dir=str(tmp_path), stage_cost_s=0.02)
+        (lp, rp), rec = sess.send(lefts, rights)
+        assert rec.brownouts >= 1 and rec.restores >= 1
+        assert sess.stage_completed["depth"] == 1
+        assert np.array_equal(np.asarray(lp0), np.asarray(lp))
+        assert np.array_equal(np.asarray(rp0), np.asarray(rp))
