@@ -97,6 +97,16 @@ def _resilience(smoke=False):
     return offload_resilience.rows(smoke=smoke)
 
 
+@section("serving")
+def _serving(smoke=False):
+    # fleet-scale streaming runtime: quiet fleet + hot wave on a shared
+    # uplink (BENCH_serving.json carries sustained streams, p99 dispatch
+    # latency vs SLO, congestion-driven cut changes, and the single-stream
+    # bit-identity rows; rows() itself asserts the pins)
+    from benchmarks import serving
+    return serving.rows(smoke=smoke)
+
+
 @section("analysis")
 def _analysis(smoke=False):
     # static contract gate (BENCH_analysis.json carries the non_baselined

@@ -143,6 +143,44 @@ def build_targets():
             targets.append(ExecutorTarget(
                 f"{tag}.cloud", cloud, (_zeros_like_avals(avals),)))
 
+    # serving-runtime jit units (DESIGN.md §13): the re-entrant micro-batch
+    # step, the fused node+cloud placement-group step, and the bugfixed
+    # cascade_serve admission path the scheduler dispatches every tick
+    from repro.serve.engine import cascade_serve
+
+    S, chunk = 3, 4
+    sframes = jnp.stack([frames[:chunk]] * S)
+    svalid = jnp.ones((S,), bool)
+    bstep = fa.batch_step(S, chunk)
+    targets.append(ExecutorTarget(
+        f"serve.batch_step[{S}x{chunk}]", bstep._core,
+        (sframes, svalid) + tuple(bstep._consts),
+        lut_pairs=((fa.lut, fa.lut_meta),)))
+
+    off8 = FaceAuthOffloadExecutor(fa, "vj", bits=8, use_pallas=False)
+    gshape = (chunk,) + tuple(frames.shape[1:])
+
+    def group_one(fr, *c):
+        arrays, wire_b = off8._node_fn(fr, *c)
+        out = dict(off8._cloud_fn(arrays, *c, frames_shape=gshape))
+        out["wire_b"] = wire_b
+        return out
+
+    targets.append(ExecutorTarget(
+        "serve.group_step[vj,8]",
+        jax.vmap(group_one, in_axes=(0,) + (None,) * len(off8._consts)),
+        (sframes,) + tuple(off8._consts),
+        lut_pairs=((fa.lut, fa.lut_meta),)))
+
+    def admit_path(reqs):
+        scorer = lambda x: jnp.mean(jnp.abs(x), axis=(1, 2, 3))  # noqa: E731
+        return cascade_serve(scorer, lambda x: {"y": x * 2.0}, reqs,
+                             threshold=0.5, capacity=2)
+
+    targets.append(ExecutorTarget(
+        "serve.cascade_admit", admit_path,
+        (jnp.zeros((6, chunk, 8, 8), jnp.float32),)))
+
     # dedicated precision subgraphs: the quantized NN tail + the codec
     qnn, lut, meta = fa.qnn, fa.lut, fa.lut_meta
     X8 = jnp.zeros((8, qnn.w1_q.shape[0]), jnp.float32)

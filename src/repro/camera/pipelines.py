@@ -584,6 +584,7 @@ class FaceAuthExecutor:
         self._pmapped = (jax.pmap(funnel,
                                   in_axes=(0,) + (None,) * len(consts))
                          if self.stream_parallel else None)
+        self._batch_steps = {}   # (n_streams, chunk, pmap) -> step closure
 
     # -- calibration ---------------------------------------------------------
 
@@ -632,6 +633,90 @@ class FaceAuthExecutor:
 
         return FAExecResult(**self._single(jnp.asarray(frames),
                                            *self._consts))
+
+    def batch_step(self, n_streams: int, chunk: int,
+                   stream_parallel: bool | None = None):
+        """Re-entrant capacity-padded micro-batch step for the serving
+        runtime (DESIGN.md §13).
+
+        Returns ``step(frames, valid) -> dict`` where ``frames`` is
+        ``(n_streams, chunk, h, w)`` and ``valid`` is ``(n_streams,)`` bool;
+        the result dict has the :class:`FAExecResult` fields with a leading
+        ``n_streams`` axis (``motion_dropped`` becomes ``(n_streams,)``).
+        Invalid slots carry the canonical quiet result — ``motion`` False,
+        ``window_id`` -1, everything else zero — exactly what the funnel
+        emits for a motionless chunk, so padding a micro-batch can never be
+        told apart from serving a quiet stream.
+
+        One jit dispatch per call: the same ``FunnelStages`` funnel vmapped
+        across the stream axis, with one pmap shard per device when
+        ``stream_parallel`` and the device count divides ``n_streams``.
+        Closures are cached per ``(n_streams, chunk)`` and invalidated by
+        :meth:`calibrate`'s rebuild, so a scheduler can call the step every
+        tick without retracing.
+        """
+        import jax
+        import jax.numpy as jnp
+
+        if stream_parallel is None:
+            stream_parallel = self.stream_parallel
+        ndev = jax.local_device_count()
+        use_pmap = bool(stream_parallel) and ndev > 1 and n_streams % ndev == 0
+        key = (int(n_streams), int(chunk), use_pmap)
+        cached = self._batch_steps.get(key)
+        if cached is not None:
+            return cached
+
+        funnel, consts = self._funnel, self._consts
+
+        def step_core(frames, valid, *c):
+            res = jax.vmap(funnel, in_axes=(0,) + (None,) * len(c))(
+                frames, *c)
+            def quiet(name, a):
+                fill = (jnp.full_like(a, -1) if name == "window_id"
+                        else jnp.zeros_like(a))
+                keep = valid.reshape(valid.shape + (1,) * (a.ndim - 1))
+                return jnp.where(keep, a, fill)
+            return {k: quiet(k, v) for k, v in res.items()}
+
+        if use_pmap:
+            shard = jax.pmap(step_core,
+                             in_axes=(0, 0) + (None,) * len(consts))
+
+            def step(frames, valid):
+                self._check_step_args(frames, valid, n_streams, chunk)
+                fr = frames.reshape((ndev, n_streams // ndev)
+                                    + tuple(frames.shape[1:]))
+                va = valid.reshape(ndev, n_streams // ndev)
+                out = shard(fr, va, *consts)
+                return {k: v.reshape((n_streams,) + tuple(v.shape[2:]))
+                        for k, v in out.items()}
+        else:
+            jitted = jax.jit(step_core)
+
+            def step(frames, valid):
+                self._check_step_args(frames, valid, n_streams, chunk)
+                return jitted(frames, valid, *consts)
+
+        # the raw traceable core (consts as explicit args) — what the
+        # static analyzer registers, the same way it traces self._funnel
+        step._core = step_core
+        step._consts = consts
+        self._batch_steps[key] = step
+        return step
+
+    @staticmethod
+    def _check_step_args(frames, valid, n_streams, chunk):
+        if tuple(frames.shape[:2]) != (n_streams, chunk):
+            raise ValueError(
+                f"batch_step closure is shape-bound: expected frames "
+                f"({n_streams}, {chunk}, h, w), got {tuple(frames.shape)} — "
+                "request a new closure via batch_step() instead of reusing "
+                "one across micro-batch geometries")
+        if tuple(valid.shape) != (n_streams,):
+            raise ValueError(
+                f"valid must be ({n_streams},) bool, got "
+                f"{tuple(valid.shape)}")
 
     def run_streams(self, frames) -> FAExecResult:
         """N independent feeds: (S, B, h, w) -> FAExecResult with leading S.

@@ -1,0 +1,25 @@
+"""Fleet-scale streaming serving runtime (DESIGN.md §13).
+
+The continuous front door over the §III executors: dynamic stream churn,
+per-stream frame queues, capacity-padded micro-batches under a latency
+SLO via the bugfixed ``cascade_serve`` admission path, measured-byte
+congestion monitoring through ``simulate_shared_link``, and sliding-window
+per-stream cut re-solves via ``CutController.resolve_window``.
+"""
+
+from repro.camera.serve.bytes_model import (FA_CUTS, fa_cut_bytes,
+                                            fa_quiet_bytes)
+from repro.camera.serve.runtime import (AdmissionDecision, Completion,
+                                        ServeConfig, StreamingServer,
+                                        TickReport)
+
+__all__ = [
+    "AdmissionDecision",
+    "Completion",
+    "FA_CUTS",
+    "ServeConfig",
+    "StreamingServer",
+    "TickReport",
+    "fa_cut_bytes",
+    "fa_quiet_bytes",
+]

@@ -1,0 +1,598 @@
+"""Continuous streaming serving runtime (DESIGN.md §13).
+
+Serves N heterogeneous camera streams on one serving device — the
+WISPCam fleet shape: thousands of harvested-energy cameras sharing one
+backscatter uplink into a cloud that runs (part of) the §III funnel.
+Streams register and leave dynamically; frames queue per stream; every
+scheduler tick forms capacity-padded micro-batches and pushes them
+through ONE dispatch per placement group:
+
+* the scorer→big-model admission path is the bugfixed
+  :func:`repro.serve.engine.cascade_serve` — a chunk motion-energy scorer
+  filters quiet chunks in front of the funnel ("Viola-Jones in front of
+  the NN" at fleet scale), the compacting cascade bounds the big batch to
+  a static capacity, and capacity-overflowed survivors come back as
+  deterministic indices that the scheduler *re-queues* (never drops);
+* local streams (``cut=None``) run through
+  :meth:`FaceAuthExecutor.batch_step` — the fused funnel vmapped across
+  the micro-batch (pmapped across devices when they divide);
+* offloaded streams run the split executors' node/cloud halves vmapped,
+  so per-chunk *measured* wire bytes come out of the same dispatch.
+
+The scorer threshold equals the funnel's own motion threshold, so a
+filtered chunk's canonical quiet result is bit-identical to running the
+funnel on it — filtering saves compute with zero semantic change (chunk
+boundaries are batch boundaries, as everywhere else in the repo).
+
+Admission control and per-stream cut selection close the two carried
+ROADMAP items: measured per-tick byte traces replay through
+``simulate_shared_link`` every ``link_window`` ticks, and each active
+stream's sliding-window funnel stats drive a
+``CutController.resolve_window`` re-solve with the link report's
+``p99_latency_s`` as the deadline constraint — congestion rises, cuts
+retreat toward fewer wire bytes.  A zero-traffic stream accumulates no
+served frames and therefore never triggers a re-solve (the PR 7
+"zero-fault stream never moves" pin, transplanted).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+
+import numpy as np
+
+from repro.camera.serve.bytes_model import (FA_CUTS, fa_cut_bytes,
+                                            fa_quiet_bytes)
+
+_RESULT_KEYS = ("motion", "n_windows", "n_auth", "scores", "window_id",
+                "window_valid", "auth", "windows_dropped", "motion_dropped",
+                "cascade_dropped")
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Scheduler contract knobs (DESIGN.md §13)."""
+
+    chunk: int = 4              # frames per micro-batch slot
+    capacity: int = 8           # micro-batch slots per placement group/tick
+    slo_s: float = 0.5          # p99 micro-batch dispatch latency SLO (wall)
+    tick_s: float = 1.0         # scheduler period (simulated seconds)
+    max_queue_s: float = 6.0    # flush a partial chunk older than this
+    resolve_every: int = 16     # served frames between per-stream re-solves
+    link_window: int = 8        # ticks of byte traces per congestion report
+    admit_util: float = 0.7     # uplink utilization ceiling at admission
+    admit_headroom: float = 0.8 # admit only while link p99 <= headroom*slo
+    admit_motion_frac: float = 0.5   # activity prior for undeclared streams
+    admit_windows_per_frame: float = 2.0
+    stats_window: int = 32      # chunks of funnel stats per stream window
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionDecision:
+    admitted: bool
+    sid: str
+    cut: str | None             # placement actually granted (may differ)
+    bits: int | None
+    reason: str
+    predicted_bps: float = 0.0
+    predicted_util: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class Completion:
+    """One chunk's delivery: per-frame leaves sliced to the real frames."""
+
+    sid: str
+    t: float
+    n_frames: int
+    kind: str                   # "served" | "quiet"
+    result: dict                # FAExecResult fields, leading axis n_frames
+    wire_bytes: float
+
+
+@dataclasses.dataclass(frozen=True)
+class TickReport:
+    t: float
+    n_ready: int
+    n_served: int
+    n_quiet: int
+    n_requeued: int
+    batch_s: float              # wall clock of this tick's dispatches
+    bytes_sent: float
+    completions: tuple          # (Completion, ...)
+    resolves_fired: int
+    cut_changes: tuple          # ((sid, old_cut, new_cut), ...)
+
+
+@dataclasses.dataclass
+class _Stream:
+    sid: str
+    fps: float
+    cut: str | None
+    bits: int | None
+    t_join: float
+    queue: deque                # (t_arrival, frame) FIFO
+    draining: bool = False
+    frames_done: int = 0
+    frames_since_resolve: int = 0
+    resolves: int = 0
+    requeues: int = 0
+    declared_bps: float = 0.0
+    stats: deque = dataclasses.field(
+        default_factory=lambda: deque(maxlen=32))   # (n, motion, windows)
+    trace: deque = dataclasses.field(
+        default_factory=lambda: deque(maxlen=8))    # bytes per tick
+    transitions: list = dataclasses.field(default_factory=list)
+
+    @property
+    def rung(self):
+        return (self.cut, self.bits if self.cut is not None else None)
+
+    def window_stats(self):
+        """Sliding-window mean (motion_frames, valid_windows) per chunk."""
+        rows = [r for r in self.stats if r[0] > 0]
+        if not rows:
+            return 0.0, 0.0
+        n = len(rows)
+        return (sum(r[1] for r in rows) / n, sum(r[2] for r in rows) / n)
+
+
+@dataclasses.dataclass(frozen=True)
+class _ReadyChunk:
+    sid: str
+    frames: np.ndarray          # (chunk, h, w) f32, padded with last frame
+    arrivals: tuple             # simulated arrival times, len n_real
+    n_real: int
+
+
+class StreamingServer:
+    """Fleet-scale streaming front door over one :class:`FaceAuthExecutor`.
+
+    ``base`` must be calibrated.  ``controller`` (a ``CutController``
+    calibrated for the same base) enables windowed per-stream cut
+    re-solves; without it, granted cuts are static.  ``link`` is the
+    shared uplink every offloaded stream transmits on.
+    """
+
+    def __init__(self, base, *, link=None, controller=None,
+                 config: ServeConfig = ServeConfig()):
+        from repro.camera.offload.link import BACKSCATTER
+
+        self.base = base
+        self.cfg = config
+        self.link = link or BACKSCATTER
+        self.controller = controller
+        self.h, self.w = base.det.grid.h, base.det.grid.w
+        self._streams: dict = {}
+        self._group_steps: dict = {}
+        self._offload_execs: dict = {}
+        self._quiet_cache: dict = {}
+        self.tick_count = 0
+        self.frames_completed = 0
+        self.batch_lat_s: list = []      # wall seconds per dispatching tick
+        self.queue_delay_s: list = []    # simulated frame sojourn times
+        self.last_link_report = None
+        self.rejections: list = []
+        # scorer semantics == the funnel's motion gate: survive iff any
+        # intra-chunk transition scores strictly above motion_threshold
+        self._score_threshold = float(np.nextafter(
+            np.float32(base.motion_threshold), np.float32(np.inf)))
+
+    # -- registration / churn -------------------------------------------------
+
+    def register(self, sid: str, *, fps: float = 1.0, cut: str | None = None,
+                 bits: int | None = 8, t: float = 0.0,
+                 motion_frac: float | None = None) -> AdmissionDecision:
+        """Admit (or reject, or re-place) one new stream.
+
+        Local streams (``cut=None``) are admitted against the compute
+        budget; offloaded streams against the shared-uplink budget — if
+        the requested cut does not fit, cheaper-byte cuts are tried before
+        rejecting, so a stream may be granted a different placement than
+        it asked for (congestion-aware placement at admission time).
+        """
+        if sid in self._streams:
+            raise ValueError(f"stream {sid!r} already registered")
+        cfg = self.cfg
+        if cut is None:
+            projected = sum(s.fps for s in self._streams.values()
+                            if s.cut is None) + fps
+            budget = cfg.capacity * cfg.chunk / cfg.tick_s
+            if projected > cfg.admit_headroom * budget:
+                dec = AdmissionDecision(
+                    False, sid, None, None,
+                    f"compute: {projected:.1f} fps over "
+                    f"{cfg.admit_headroom * budget:.1f} fps budget")
+                self.rejections.append(dec)
+                return dec
+            self._admit(sid, fps, None, None, t, 0.0)
+            return AdmissionDecision(True, sid, None, None, "admitted")
+
+        if cut not in FA_CUTS:
+            raise ValueError(f"cut {cut!r} not in {FA_CUTS}")
+        frac = cfg.admit_motion_frac if motion_frac is None else motion_frac
+        fleet_bps = sum(s.declared_bps for s in self._streams.values())
+        p99 = (self.last_link_report.p99_latency_s
+               if self.last_link_report is not None else 0.0)
+        if p99 > cfg.admit_headroom * cfg.slo_s:
+            dec = AdmissionDecision(
+                False, sid, cut, bits,
+                f"congestion: link p99 {p99:.3f}s over "
+                f"{cfg.admit_headroom * cfg.slo_s:.3f}s headroom")
+            self.rejections.append(dec)
+            return dec
+        candidates = [cut] + [c for c in FA_CUTS if c != cut]
+        candidates.sort(key=lambda c: (c != cut,
+                                       self._predict_bps(c, bits, fps, frac)))
+        for c in candidates:
+            bps = self._predict_bps(c, bits, fps, frac)
+            util = (fleet_bps + bps) / self.link.bytes_per_s
+            if util <= cfg.admit_util:
+                reason = ("admitted" if c == cut else
+                          f"re-placed from {cut!r}: requested cut over "
+                          f"{cfg.admit_util:.0%} uplink utilization")
+                self._admit(sid, fps, c, bits, t, bps)
+                return AdmissionDecision(True, sid, c, bits, reason, bps, util)
+        bps = self._predict_bps(candidates[-1], bits, fps, frac)
+        dec = AdmissionDecision(
+            False, sid, cut, bits,
+            f"uplink: even cheapest cut exceeds {cfg.admit_util:.0%} "
+            f"utilization ({fleet_bps:.0f}+{bps:.0f} B/s of "
+            f"{self.link.bytes_per_s:.0f})", bps,
+            (fleet_bps + bps) / self.link.bytes_per_s)
+        self.rejections.append(dec)
+        return dec
+
+    def _predict_bps(self, cut, bits, fps, motion_frac):
+        cfg = self.cfg
+        chunk_b = fa_cut_bytes(
+            cut, bits, frames=cfg.chunk, h=self.h, w=self.w,
+            motion_frames=motion_frac * cfg.chunk,
+            valid_windows=motion_frac * cfg.chunk
+            * cfg.admit_windows_per_frame)
+        return chunk_b / cfg.chunk * fps
+
+    def _admit(self, sid, fps, cut, bits, t, bps):
+        cfg = self.cfg
+        st = _Stream(sid=sid, fps=fps, cut=cut,
+                     bits=bits if cut is not None else None, t_join=t,
+                     queue=deque(), declared_bps=bps)
+        st.stats = deque(maxlen=cfg.stats_window)
+        st.trace = deque([0.0] * min(self.tick_count, cfg.link_window),
+                         maxlen=cfg.link_window)
+        self._streams[sid] = st
+
+    def unregister(self, sid: str) -> int:
+        """Begin draining ``sid``; queued frames are still served.
+
+        Returns the number of frames left in the queue — the stream object
+        disappears once they have all completed (immediately when empty).
+        """
+        st = self._streams[sid]
+        st.draining = True
+        n = len(st.queue)
+        if n == 0:
+            del self._streams[sid]
+        return n
+
+    def enqueue(self, sid: str, frame, t: float):
+        st = self._streams[sid]
+        if st.draining:
+            raise ValueError(f"stream {sid!r} is draining")
+        st.queue.append((float(t), np.asarray(frame, np.float32)))
+
+    @property
+    def streams(self):
+        return dict(self._streams)
+
+    # -- placement groups ------------------------------------------------------
+
+    def _bucket(self, n: int) -> int:
+        """Round a ready-count up to a multiple of ``capacity``.
+
+        Dispatch batch shapes come from a small static set, so a tick
+        never pays a fresh XLA compile just because the number of ready
+        chunks drifted by one (p99 dispatch latency would otherwise be
+        compile time, not compute).
+        """
+        cap = self.cfg.capacity
+        return cap * max(1, -(-n // cap))
+
+    def prewarm(self, rungs, *, max_ready: int | None = None):
+        """Compile every placement group ahead of the measured ticks.
+
+        Runs one zeros dispatch through the full scorer->cascade->group
+        path per ``rung`` x shape bucket (buckets cover ``max_ready``
+        ready chunks, default one ``capacity``).  Zero chunks are
+        motionless, so nothing is observed and no stats move — this only
+        populates the jit caches.
+        """
+        import jax
+        import jax.numpy as jnp
+
+        from repro.serve.engine import cascade_serve
+
+        cfg = self.cfg
+        top = self._bucket(max_ready or cfg.capacity)
+        widths = range(cfg.capacity, top + 1, cfg.capacity)
+        for rung in rungs:
+            step = self._group_step(rung)
+            for b in widths:
+                stack = jnp.zeros((b, cfg.chunk, self.h, self.w),
+                                  jnp.float32)
+                out = cascade_serve(self._scores, step, stack,
+                                    threshold=self._score_threshold,
+                                    capacity=cfg.capacity)
+                jax.block_until_ready(out)
+
+    def _group_step(self, rung):
+        """Cached single-dispatch micro-batch closure for one placement."""
+        step = self._group_steps.get(rung)
+        if step is not None:
+            return step
+        import jax
+        import jax.numpy as jnp
+
+        cap, chunk = self.cfg.capacity, self.cfg.chunk
+        cut, bits = rung
+        if cut is None:
+            inner = self.base.batch_step(cap, chunk)
+            ones = jnp.ones((cap,), bool)
+
+            def step(chunks):
+                out = dict(inner(chunks, ones))
+                out["wire_b"] = jnp.zeros((cap,), jnp.float32)
+                return out
+        else:
+            from repro.camera.offload.executors import FaceAuthOffloadExecutor
+
+            off = self._offload_execs.get(rung)
+            if off is None:
+                off = FaceAuthOffloadExecutor(self.base, cut, bits=bits,
+                                              use_pallas=False)
+                self._offload_execs[rung] = off
+            consts = tuple(off._consts)
+            shape = (chunk, self.h, self.w)
+
+            def one(frames):
+                arrays, wire_b = off._node_fn(frames, *consts)
+                res = off._cloud_fn(arrays, *consts, frames_shape=shape)
+                out = dict(res)
+                out["wire_b"] = wire_b
+                return out
+
+            step = jax.jit(jax.vmap(one))
+        self._group_steps[rung] = step
+        return step
+
+    def _scores(self, chunks):
+        """Chunk motion energy — the cascade's cheap scorer."""
+        import jax.numpy as jnp
+
+        from repro.camera.motion import motion_score
+
+        if chunks.shape[1] < 2:
+            return jnp.full((chunks.shape[0],), -np.inf, jnp.float32)
+        sc = motion_score(chunks[:, :-1], chunks[:, 1:],
+                          self.base.motion_factor)
+        return jnp.max(sc, axis=-1)
+
+    def _quiet_result(self, n):
+        res = self._quiet_cache.get(n)
+        if res is None:
+            W = self.base.stages.window_capacity
+            res = dict(
+                motion=np.zeros(n, bool),
+                n_windows=np.zeros(n, np.int32),
+                n_auth=np.zeros(n, np.int32),
+                scores=np.zeros((n, W), np.float32),
+                window_id=np.full((n, W), -1, np.int32),
+                window_valid=np.zeros((n, W), bool),
+                auth=np.zeros((n, W), bool),
+                windows_dropped=np.zeros(n, np.int32),
+                motion_dropped=np.int32(0),
+                cascade_dropped=np.zeros(n, np.int32))
+            self._quiet_cache[n] = res
+        return res
+
+    # -- the tick --------------------------------------------------------------
+
+    def _gather_ready(self, t):
+        cfg = self.cfg
+        ready = []
+        for st in self._streams.values():
+            q = st.queue
+            if not q:
+                continue
+            full = len(q) >= cfg.chunk
+            stale = (t - q[0][0]) >= cfg.max_queue_s
+            if not (full or stale or st.draining):
+                continue
+            n_real = min(cfg.chunk, len(q))
+            taken = [q.popleft() for _ in range(n_real)]
+            frames = [f for _, f in taken]
+            while len(frames) < cfg.chunk:      # pad: repeated last frame is
+                frames.append(frames[-1])       # motionless, hence quiet
+            ready.append(_ReadyChunk(
+                sid=st.sid, frames=np.stack(frames),
+                arrivals=tuple(a for a, _ in taken), n_real=n_real))
+        return ready
+
+    def tick(self, t: float) -> TickReport:
+        """One scheduler period at simulated time ``t``."""
+        import jax.numpy as jnp
+
+        from repro.serve.engine import cascade_serve
+
+        cfg = self.cfg
+        t0 = time.perf_counter()
+        ready = self._gather_ready(t)
+        groups: dict = {}
+        for rc in ready:
+            groups.setdefault(self._streams[rc.sid].rung, []).append(rc)
+
+        completions, changes = [], []
+        tick_bytes = {sid: 0.0 for sid in self._streams}
+        n_served = n_quiet = n_requeued = 0
+        dispatched = False
+        for rung, rcs in groups.items():
+            dispatched = True
+            cut, bits = rung
+            # pad the request stack to a capacity-multiple bucket so both
+            # the big model's (capacity, ...) batch and the scorer's see
+            # tick-invariant shapes: zero chunks are motionless, score
+            # below threshold, filtered before any compute
+            n = len(rcs)
+            b = self._bucket(n)
+            stack = np.zeros((b, cfg.chunk, self.h, self.w), np.float32)
+            for i, rc in enumerate(rcs):
+                stack[i] = rc.frames
+            outputs, served, stats = cascade_serve(
+                self._scores, self._group_step(rung), jnp.asarray(stack),
+                threshold=self._score_threshold, capacity=cfg.capacity)
+            served = np.asarray(served)
+            dropped = set(int(i) for i in np.asarray(
+                stats["dropped_capacity_idx"]) if i >= 0)
+            out_np = {k: np.asarray(v) for k, v in outputs.items()}
+            for i, rc in enumerate(rcs):
+                st = self._streams[rc.sid]
+                if i in dropped:                 # re-queue, oldest first
+                    n_requeued += 1
+                    st.requeues += 1
+                    for a, f in zip(reversed(rc.arrivals),
+                                    reversed(rc.frames[:rc.n_real])):
+                        st.queue.appendleft((a, f))
+                    continue
+                if served[i]:
+                    n_served += 1
+                    result = {k: (out_np[k][i] if out_np[k][i].ndim == 0
+                                  else out_np[k][i][:rc.n_real])
+                              for k in _RESULT_KEYS}
+                    wire = float(out_np["wire_b"][i]) if cut else 0.0
+                    kind = "served"
+                    motion_n = int(result["motion"].sum())
+                    windows_n = int(result["window_valid"].sum())
+                    if cut and self.controller is not None:
+                        self.controller.observe(cut, units=rc.n_real,
+                                                wire_bytes=wire)
+                else:                            # scorer-filtered: quiet
+                    n_quiet += 1
+                    q = self._quiet_result(cfg.chunk)
+                    result = {k: (q[k] if np.ndim(q[k]) == 0
+                                  else q[k][:rc.n_real]) for k in _RESULT_KEYS}
+                    wire = (fa_quiet_bytes(cut, bits, frames=cfg.chunk,
+                                           h=self.h, w=self.w)
+                            if cut else 0.0)
+                    kind = "quiet"
+                    motion_n = windows_n = 0
+                tick_bytes[rc.sid] = tick_bytes.get(rc.sid, 0.0) + wire
+                st.stats.append((rc.n_real, motion_n, windows_n))
+                st.frames_done += rc.n_real
+                if st.cut is not None:
+                    st.frames_since_resolve += rc.n_real
+                completions.append(Completion(
+                    sid=rc.sid, t=t, n_frames=rc.n_real, kind=kind,
+                    result=result, wire_bytes=wire))
+
+        batch_s = time.perf_counter() - t0
+        if dispatched:
+            self.batch_lat_s.append(batch_s)
+        # simulated frame sojourn: queue wait + this tick's dispatch
+        # (at most one ready chunk per stream per tick, so sid identifies it)
+        completed_sids = {c.sid for c in completions}
+        for rc in ready:
+            if rc.sid in completed_sids:
+                self.queue_delay_s.extend(
+                    (t + batch_s) - a for a in rc.arrivals)
+        self.frames_completed += sum(c.n_frames for c in completions)
+
+        # byte traces + congestion report
+        for sid, st in self._streams.items():
+            st.trace.append(tick_bytes.get(sid, 0.0))
+        self.tick_count += 1
+        if (self.tick_count % cfg.link_window == 0
+                and any(s.cut is not None for s in self._streams.values())):
+            self._refresh_link_report()
+        # refresh measured offered load for admission
+        for st in self._streams.values():
+            if st.cut is not None and st.trace:
+                st.declared_bps = (sum(st.trace)
+                                   / (len(st.trace) * cfg.tick_s))
+
+        resolves = self._maybe_resolve(changes)
+        self._reap_drained()
+        return TickReport(
+            t=t, n_ready=len(ready), n_served=n_served, n_quiet=n_quiet,
+            n_requeued=n_requeued, batch_s=batch_s,
+            bytes_sent=float(sum(tick_bytes.values())),
+            completions=tuple(completions), resolves_fired=resolves,
+            cut_changes=tuple(changes))
+
+    def _refresh_link_report(self):
+        from repro.camera.offload.link import simulate_shared_link
+
+        cfg = self.cfg
+        rows = [list(s.trace) for s in self._streams.values()
+                if s.cut is not None and s.trace]
+        if not rows:
+            return
+        width = max(len(r) for r in rows)
+        mat = np.zeros((len(rows), width))
+        for i, r in enumerate(rows):
+            mat[i, width - len(r):] = r
+        self.last_link_report = simulate_shared_link(
+            mat, self.link, frame_period_s=cfg.tick_s)
+
+    def _maybe_resolve(self, changes):
+        """Windowed per-stream cut re-solves under the congestion deadline."""
+        cfg = self.cfg
+        if self.controller is None:
+            return 0
+        fired = 0
+        p99 = (self.last_link_report.p99_latency_s
+               if self.last_link_report is not None else self.link.latency_s)
+        for st in self._streams.values():
+            if st.cut is None or st.frames_since_resolve < cfg.resolve_every:
+                continue
+            m, v = st.window_stats()
+            chunk_b = {c: fa_cut_bytes(c, st.bits, frames=cfg.chunk,
+                                       h=self.h, w=self.w, motion_frames=m,
+                                       valid_windows=v)
+                       for c in FA_CUTS}
+            cur = chunk_b[st.cut]
+            lat = {c: max(self.link.latency_s,
+                          p99 + (chunk_b[c] - cur) / self.link.bytes_per_s)
+                   for c in FA_CUTS}
+            sol = self.controller.resolve_window(
+                deadline_s=cfg.slo_s, cut_latency_s=lat,
+                predicted_bytes={c: chunk_b[c] / cfg.chunk for c in FA_CUTS})
+            st.resolves += 1
+            st.frames_since_resolve = 0
+            fired += 1
+            if sol.cut_after != st.cut:
+                st.transitions.append((self.tick_count, st.cut,
+                                       sol.cut_after))
+                changes.append((st.sid, st.cut, sol.cut_after))
+                st.cut = sol.cut_after
+        return fired
+
+    def _reap_drained(self):
+        done = [sid for sid, st in self._streams.items()
+                if st.draining and not st.queue]
+        for sid in done:
+            del self._streams[sid]
+
+    # -- fleet metrics ---------------------------------------------------------
+
+    def p99_batch_s(self) -> float:
+        if not self.batch_lat_s:
+            return 0.0
+        return float(np.quantile(np.asarray(self.batch_lat_s), 0.99))
+
+    def frames_served(self) -> int:
+        return self.frames_completed
+
+    def total_resolves(self) -> int:
+        return 0 if self.controller is None else self.controller.resolves

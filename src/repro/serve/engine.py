@@ -25,8 +25,13 @@ def sample(logits, key, cfg: SamplerConfig):
     if cfg.temperature <= 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     logits = logits.astype(jnp.float32) / cfg.temperature
-    if cfg.top_k:
-        kth = jnp.sort(logits, axis=-1)[:, -cfg.top_k][:, None]
+    vocab = logits.shape[-1]
+    # top_k >= vocab keeps the whole distribution (and top_k == 0 means
+    # off); only a proper subset needs the kth-value filter — the raw
+    # ``[:, -top_k]`` index wraps around for top_k > vocab
+    k = min(int(cfg.top_k), vocab)
+    if 0 < k < vocab:
+        kth = jnp.sort(logits, axis=-1)[:, vocab - k][:, None]
         logits = jnp.where(logits < kth, -jnp.inf, logits)
     return jax.random.categorical(key, logits).astype(jnp.int32)
 
@@ -61,33 +66,64 @@ def generate(model, params, prompt, n_tokens: int, *, enc_out=None,
 
 
 def cascade_serve(scorer_fn, big_model_fn, requests, *, threshold: float,
-                  capacity_fraction: float = 0.25):
+                  capacity_fraction: float = 0.25,
+                  capacity: int | None = None):
     """Run a cheap scorer over all requests; only survivors (bounded by a
     static capacity) reach the big model — 'Viola-Jones in front of the NN'
     for an inference cluster.
 
     scorer_fn:   (batch_items) -> scores (b,)   — cheap (small model / heuristic)
-    big_model_fn:(batch_items) -> outputs (b, ...) — expensive
-    Returns (outputs (b, ...) with zeros for filtered, mask, stats).
+    big_model_fn:(batch_items) -> outputs, any pytree with leading batch axis
+    ``capacity`` is the absolute big-model batch (clamped to [1, b]);
+    when None it derives from ``capacity_fraction``.
+
+    Returns ``(outputs, served, stats)``: outputs is the big model's pytree
+    scattered back to the request index space (zeros for non-served rows),
+    ``served`` the (b,) bool mask of requests that reached the big model.
+    Capacity is enforced *inside* the compacting cascade (a zero-cost
+    admit stage bounded to ``capacity``), so ``stats['n_dropped_capacity']``
+    is the cascade's own overflow count, and the dropped survivors are
+    surfaced deterministically: the cascade compacts with a stable argsort
+    on the live mask (original-index tie-break), so the kept set is always
+    the ``capacity`` lowest-indexed survivors and
+    ``stats['dropped_capacity_idx']`` lists the overflowed survivor indices
+    ascending, padded with -1 — a caller (the streaming runtime) can
+    re-queue exactly those requests.
     """
     b = requests.shape[0]
-    cap = max(1, int(b * capacity_fraction))
-    res = compacting_cascade(
-        [Stage(scorer_fn, threshold, "scorer")], requests, capacities=[b])
-    mask = res.mask
+    cap = int(b * capacity_fraction) if capacity is None else int(capacity)
+    cap = max(1, min(cap, b))
 
-    # compact survivors to a static capacity batch for the big model
-    order = jnp.argsort(jnp.where(mask, 0, 1), stable=True)
+    def admit(items):
+        return jnp.zeros((items.shape[0],), jnp.float32)
+
+    res = compacting_cascade(
+        [Stage(scorer_fn, threshold, "scorer"),
+         Stage(admit, -jnp.inf, "capacity")],
+        requests, capacities=[b, cap])
+    scorer_mask = res.scores[0] >= threshold
+    served = res.mask                       # survivors that fit the capacity
+
+    # rebuild the cascade's compaction permutation (same stable argsort on
+    # the post-scorer mask) to gather the big-model sub-batch
+    order = jnp.argsort(jnp.where(scorer_mask, 0, 1), stable=True)
     picked = order[:cap]
     sub_batch = jnp.take(requests, picked, axis=0)
     sub_out = big_model_fn(sub_batch)
-    out_shape = (b,) + sub_out.shape[1:]
-    outputs = jnp.zeros(out_shape, sub_out.dtype).at[picked].set(sub_out)
-    picked_mask = jnp.zeros((b,), bool).at[picked].set(True)
-    served = picked_mask & mask
+
+    def scatter(leaf):
+        out = jnp.zeros((b,) + leaf.shape[1:], leaf.dtype).at[picked].set(leaf)
+        keep = served.reshape((b,) + (1,) * (out.ndim - 1))
+        return jnp.where(keep, out, jnp.zeros_like(out))
+
+    outputs = jax.tree_util.tree_map(scatter, sub_out)
+    idx = jnp.arange(b, dtype=jnp.int32)
+    dropped = scorer_mask & ~served
+    dropped_idx = jnp.sort(jnp.where(dropped, idx, jnp.int32(b)))
     stats = {
-        "n_candidates": jnp.sum(mask).astype(jnp.int32),
-        "n_served": jnp.sum(served).astype(jnp.int32),
-        "n_dropped_capacity": (jnp.sum(mask) - jnp.sum(served)).astype(jnp.int32),
+        "n_candidates": res.n_survivors[0],
+        "n_served": res.n_survivors[1],
+        "n_dropped_capacity": res.dropped[1],
+        "dropped_capacity_idx": jnp.where(dropped_idx == b, -1, dropped_idx),
     }
-    return jnp.where(served[(...,) + (None,) * (outputs.ndim - 1)], outputs, 0), served, stats
+    return outputs, served, stats

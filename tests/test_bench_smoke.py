@@ -15,7 +15,7 @@ import tempfile
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SECTIONS = ("fa", "vr", "vj", "nn", "bssa", "detect", "fa_hotpath",
-            "offload", "resilience", "analysis", "roofline")
+            "offload", "resilience", "serving", "analysis", "roofline")
 
 
 def test_benchmark_smoke_all_sections():
@@ -52,6 +52,16 @@ def test_benchmark_smoke_all_sections():
         # a faulty neighbor's retries must congest the shared uplink
         assert (float(rrow["p99_congested_s"][0])
                 > float(rrow["p99_clean_s"][0]))
+        srv = json.load(open(os.path.join(td, "BENCH_serving.json")))
+        srow = {r[1]: (r[2], r[3]) for r in srv["rows"]}
+        # scheduler contract: measured p99 dispatch latency under the SLO,
+        # and the windowed controller re-solve actually fired
+        assert srow["slo_ok"][0] == "1"
+        p99, note = srow["p99_batch_s"]
+        assert float(p99) <= float(note.split("SLO=")[1].split("s")[0])
+        assert int(srow["resolves_fired"][0]) >= 1
+        assert srow["serve_bitexact_local"][0] == "1"
+        assert srow["serve_bitexact_vj_raw"][0] == "1"
         ana = json.load(open(os.path.join(td, "BENCH_analysis.json")))
         arow = {r[1]: r[2] for r in ana["rows"]}
         assert arow["non_baselined"] == "0"

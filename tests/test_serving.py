@@ -1,0 +1,494 @@
+"""Fleet-scale streaming serving runtime (DESIGN.md §13).
+
+Covers the seeding bugfixes (``cascade_serve`` enforcing its capacity
+inside the compacting cascade with deterministic dropped-survivor
+indices; ``sample`` surviving every ``top_k`` edge), the re-entrant
+``FaceAuthExecutor.batch_step``, the serve-layer bytes model, the
+``StreamingServer`` churn edge cases, the windowed ``CutController``
+re-solve API, and the single-stream bit-identity acceptance pin.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.camera.offload import BACKSCATTER, CutController
+from repro.camera.offload.executors import FaceAuthOffloadExecutor
+from repro.camera.pipelines import (FAWorkloadStats, FaceAuthExecutor,
+                                    calibrate_fa, fa_pipeline, fa_profiles)
+from repro.camera.serve import (FA_CUTS, ServeConfig, StreamingServer,
+                                fa_cut_bytes, fa_quiet_bytes)
+from repro.serve.engine import SamplerConfig, cascade_serve, sample
+
+_RESULT_FIELDS = ("motion", "n_windows", "n_auth", "scores", "window_id",
+                  "window_valid", "auth", "windows_dropped", "motion_dropped",
+                  "cascade_dropped")
+
+
+@pytest.fixture(scope="module")
+def fa_setup():
+    from benchmarks.workloads import fa_cascade, fa_scan
+    from repro.camera.face_nn import train_face_nn
+    from repro.camera.synthetic import face_dataset, security_video
+
+    frames, _truth = security_video(n_frames=10, motion_frames=5, seed=1)
+    casc = fa_cascade(smoke=True)
+    X, y, _ = face_dataset(n_per_class=80, seed=3)
+    nn = train_face_nn(X, y, steps=60)
+    sf, st, ad = fa_scan(True)
+    ex = FaceAuthExecutor(casc, nn, frames.shape[1], frames.shape[2],
+                          scale_factor=sf, step=st, adaptive=ad)
+    ex.calibrate(frames)
+    fj = jnp.asarray(frames)
+    return ex, frames, fj, ex(fj)
+
+
+@pytest.fixture(scope="module")
+def controller(fa_setup):
+    ex, frames, fj, base = fa_setup
+    stats = FAWorkloadStats(
+        n_frames=len(frames),
+        motion_frames=max(int(np.asarray(base.motion).sum()), 1),
+        windows_to_nn=max(int(np.asarray(base.n_windows).sum()), 1))
+    cal = calibrate_fa(stats)
+    profiles = fa_profiles()
+    profiles["nn"] = cal.nn_profile()
+    link = dataclasses.replace(BACKSCATTER,
+                               joules_per_byte=cal.rf_joules_per_byte)
+    ctl = CutController(
+        lambda cut: FaceAuthOffloadExecutor(ex, cut, bits=8,
+                                            use_pallas=False),
+        cuts=FA_CUTS, template=fa_pipeline(stats), profiles=profiles,
+        link=link, regime="energy", unit_rate_hz=1.0,
+        duties={"sensor": 1.0, "motion": 1.0, "vj": 0.0, "nn": 1.0})
+    ctl.calibrate(fj)
+    return ctl
+
+
+def _motion_pair(frames, base):
+    """Two consecutive frames whose transition passes the motion gate."""
+    motion = np.asarray(base.motion)
+    i = int(np.argmax(motion[1:])) + 1
+    assert motion[i]
+    return np.stack([frames[i - 1], frames[i]])
+
+
+def _quiet_pair(frames):
+    return np.stack([frames[0], frames[0]])
+
+
+# ---------------------------------------------------------------------------
+# cascade_serve: capacity enforced in-cascade, deterministic drops
+# ---------------------------------------------------------------------------
+
+
+def _value_scorer(items):
+    return jnp.mean(items, axis=tuple(range(1, items.ndim)))
+
+
+class TestCascadeServe:
+    def test_capacity_enforced_with_deterministic_drops(self):
+        # survivors at indices 1, 3, 4, 6; capacity 2 must keep the two
+        # lowest-indexed survivors and surface exactly the other two
+        vals = np.array([0, 5, 0, 5, 5, 0, 5, 0], np.float32)
+        reqs = jnp.asarray(np.tile(vals[:, None], (1, 3)))
+        out, served, stats = cascade_serve(
+            _value_scorer, lambda x: x * 2.0, reqs,
+            threshold=1.0, capacity=2)
+        assert int(stats["n_candidates"]) == 4
+        assert int(stats["n_served"]) == 2
+        assert int(stats["n_dropped_capacity"]) == 2
+        assert np.array_equal(np.asarray(served),
+                              [False, True, False, True,
+                               False, False, False, False])
+        assert list(np.asarray(stats["dropped_capacity_idx"])[:2]) == [4, 6]
+        assert all(i == -1
+                   for i in np.asarray(stats["dropped_capacity_idx"])[2:])
+        # deterministic: the exact same answer on a second call
+        out2, served2, stats2 = cascade_serve(
+            _value_scorer, lambda x: x * 2.0, reqs,
+            threshold=1.0, capacity=2)
+        assert np.array_equal(np.asarray(served), np.asarray(served2))
+        assert np.array_equal(np.asarray(stats["dropped_capacity_idx"]),
+                              np.asarray(stats2["dropped_capacity_idx"]))
+        assert np.array_equal(np.asarray(out), np.asarray(out2))
+
+    def test_outputs_scattered_pytree(self):
+        vals = np.array([3, 0, 3, 3], np.float32)
+        reqs = jnp.asarray(np.tile(vals[:, None], (1, 2)))
+        big = lambda x: {"double": x * 2.0,  # noqa: E731
+                         "row_sum": jnp.sum(x, axis=-1)}
+        out, served, _ = cascade_serve(_value_scorer, big, reqs,
+                                       threshold=1.0, capacity=4)
+        assert np.array_equal(np.asarray(served), [True, False, True, True])
+        dbl = np.asarray(out["double"])
+        assert np.array_equal(dbl[0], np.asarray(reqs[0]) * 2)
+        assert np.array_equal(dbl[1], np.zeros(2))  # non-served row zeroed
+        assert float(np.asarray(out["row_sum"])[1]) == 0.0
+
+    def test_capacity_fraction_derives_and_clamps(self):
+        reqs = jnp.ones((8, 2), jnp.float32) * 5.0
+        _, served, stats = cascade_serve(
+            _value_scorer, lambda x: x, reqs, threshold=1.0,
+            capacity_fraction=0.25)
+        assert int(np.asarray(served).sum()) == 2       # 8 * 0.25
+        # fraction 0 clamps to a 1-slot big batch, never zero
+        _, served, _ = cascade_serve(
+            _value_scorer, lambda x: x, reqs, threshold=1.0,
+            capacity_fraction=0.0)
+        assert int(np.asarray(served).sum()) == 1
+        # capacity over b clamps to b: every survivor served, no drops
+        _, served, stats = cascade_serve(
+            _value_scorer, lambda x: x, reqs, threshold=1.0, capacity=99)
+        assert int(np.asarray(served).sum()) == 8
+        assert int(stats["n_dropped_capacity"]) == 0
+
+    def test_no_survivors(self):
+        reqs = jnp.zeros((4, 2), jnp.float32)
+        out, served, stats = cascade_serve(
+            _value_scorer, lambda x: x + 1.0, reqs, threshold=1.0,
+            capacity=2)
+        assert not np.asarray(served).any()
+        assert int(stats["n_candidates"]) == 0
+        assert np.array_equal(np.asarray(out), np.zeros((4, 2)))
+
+
+# ---------------------------------------------------------------------------
+# sample: top_k edges
+# ---------------------------------------------------------------------------
+
+
+class TestSample:
+    VOCAB = 7
+
+    def _logits(self):
+        rng = np.random.default_rng(0)
+        return jnp.asarray(rng.normal(size=(5, self.VOCAB)).astype(np.float32))
+
+    @pytest.mark.parametrize("top_k", [0, 1, VOCAB, VOCAB + 5])
+    def test_top_k_edges(self, top_k):
+        logits = self._logits()
+        toks = sample(logits, jax.random.PRNGKey(0),
+                      SamplerConfig(temperature=1.0, top_k=top_k))
+        toks = np.asarray(toks)
+        assert toks.shape == (5,) and toks.dtype == np.int32
+        assert ((0 <= toks) & (toks < self.VOCAB)).all()
+
+    def test_top_k_one_is_argmax(self):
+        logits = self._logits()
+        toks = sample(logits, jax.random.PRNGKey(3),
+                      SamplerConfig(temperature=1.0, top_k=1))
+        assert np.array_equal(np.asarray(toks),
+                              np.asarray(jnp.argmax(logits, axis=-1)))
+
+    @pytest.mark.parametrize("top_k", [0, 1, VOCAB + 5])
+    def test_temperature_zero_greedy_parity(self, top_k):
+        logits = self._logits()
+        toks = sample(logits, jax.random.PRNGKey(7),
+                      SamplerConfig(temperature=0.0, top_k=top_k))
+        assert np.array_equal(np.asarray(toks),
+                              np.asarray(jnp.argmax(logits, axis=-1)))
+
+    def test_full_vocab_matches_unfiltered(self):
+        logits = self._logits()
+        key = jax.random.PRNGKey(11)
+        a = sample(logits, key, SamplerConfig(temperature=1.0, top_k=0))
+        b = sample(logits, key,
+                   SamplerConfig(temperature=1.0, top_k=self.VOCAB))
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# FaceAuthExecutor.batch_step
+# ---------------------------------------------------------------------------
+
+
+class TestBatchStep:
+    def test_matches_single_stream_bitwise(self, fa_setup):
+        ex, frames, fj, base = fa_setup
+        chunks = [frames[0:4], frames[4:8], frames[2:6]]
+        step = ex.batch_step(3, 4)
+        out = step(jnp.asarray(np.stack(chunks)), jnp.ones((3,), bool))
+        for i, ch in enumerate(chunks):
+            ref = ex(jnp.asarray(ch))
+            for f in _RESULT_FIELDS:
+                assert np.array_equal(np.asarray(out[f])[i],
+                                      np.asarray(getattr(ref, f))), (f, i)
+
+    def test_invalid_slots_carry_quiet_result(self, fa_setup):
+        ex, frames, fj, base = fa_setup
+        stack = jnp.asarray(np.stack([frames[0:4], frames[4:8]]))
+        out = ex.batch_step(2, 4)(stack, jnp.asarray([True, False]))
+        assert not np.asarray(out["motion"])[1].any()
+        assert (np.asarray(out["window_id"])[1] == -1).all()
+        assert not np.asarray(out["scores"])[1].any()
+        assert not np.asarray(out["window_valid"])[1].any()
+
+    def test_closure_cached_and_invalidated_by_calibrate(self, fa_setup):
+        ex, frames, fj, base = fa_setup
+        step = ex.batch_step(2, 4)
+        assert ex.batch_step(2, 4) is step
+        ex.calibrate(frames)           # same data: rebuild, same semantics
+        assert ex.batch_step(2, 4) is not step
+
+    def test_shape_validation(self, fa_setup):
+        ex, frames, fj, base = fa_setup
+        step = ex.batch_step(2, 4)
+        with pytest.raises(ValueError, match="shape-bound"):
+            step(jnp.asarray(np.stack([frames[0:3], frames[3:6]])),
+                 jnp.ones((2,), bool))
+        with pytest.raises(ValueError):
+            step(jnp.asarray(np.stack([frames[0:4]])), jnp.ones((1,), bool))
+
+
+# ---------------------------------------------------------------------------
+# serve-layer bytes model == the node halves' measured wire bytes
+# ---------------------------------------------------------------------------
+
+
+class TestBytesModel:
+    @pytest.mark.parametrize("cut", FA_CUTS)
+    def test_quiet_chunk_bytes_exact(self, fa_setup, cut):
+        ex, frames, fj, base = fa_setup
+        off = FaceAuthOffloadExecutor(ex, cut, bits=8, use_pallas=False)
+        _, wb = off._node_fn(jnp.asarray(_quiet_pair(frames)), *off._consts)
+        h, w = frames.shape[1], frames.shape[2]
+        assert float(wb) == fa_quiet_bytes(cut, 8, frames=2, h=h, w=w)
+
+    @pytest.mark.parametrize("cut", FA_CUTS)
+    def test_live_chunk_bytes_exact_at_measured_stats(self, fa_setup, cut):
+        ex, frames, fj, base = fa_setup
+        chunk = frames[:4]
+        res = ex(jnp.asarray(chunk))
+        m = int(np.asarray(res.motion).sum())
+        v = int(np.asarray(res.window_valid).sum())
+        off = FaceAuthOffloadExecutor(ex, cut, bits=8, use_pallas=False)
+        _, wb = off._node_fn(jnp.asarray(chunk), *off._consts)
+        h, w = frames.shape[1], frames.shape[2]
+        assert float(wb) == fa_cut_bytes(cut, 8, frames=4, h=h, w=w,
+                                         motion_frames=m, valid_windows=v)
+
+    def test_unknown_cut_raises(self):
+        with pytest.raises(ValueError):
+            fa_cut_bytes("head", 8, frames=4, h=16, w=16)
+
+
+# ---------------------------------------------------------------------------
+# StreamingServer: churn edge cases
+# ---------------------------------------------------------------------------
+
+
+def _local_server(ex, **kw):
+    cfg = ServeConfig(chunk=2, capacity=2, tick_s=1.0, max_queue_s=100.0,
+                      **kw)
+    return StreamingServer(ex, config=cfg)
+
+
+class TestStreamingChurn:
+    def test_join_mid_window(self, fa_setup):
+        ex, frames, fj, base = fa_setup
+        srv = _local_server(ex)
+        srv.register("a", fps=1.0)
+        srv.enqueue("a", frames[0], t=0.0)
+        srv.enqueue("a", frames[1], t=0.5)
+        rep1 = srv.tick(1.0)
+        assert {c.sid for c in rep1.completions} == {"a"}
+        srv.register("b", fps=1.0, t=1.0)      # joins after serving started
+        srv.enqueue("b", frames[2], t=1.1)
+        srv.enqueue("b", frames[3], t=1.2)
+        rep2 = srv.tick(2.0)
+        assert {c.sid for c in rep2.completions} == {"b"}
+        assert set(srv.streams) == {"a", "b"}
+
+    def test_leave_with_queued_frames_drains_then_reaps(self, fa_setup):
+        ex, frames, fj, base = fa_setup
+        srv = _local_server(ex)
+        srv.register("a", fps=1.0)
+        for i in range(3):                     # 1.5 chunks queued
+            srv.enqueue("a", frames[i], t=float(i) / 10)
+        assert srv.unregister("a") == 3
+        with pytest.raises(ValueError, match="draining"):
+            srv.enqueue("a", frames[3], t=1.0)
+        rep1 = srv.tick(1.0)                   # full chunk
+        rep2 = srv.tick(2.0)                   # draining flushes the tail
+        done = [c for r in (rep1, rep2) for c in r.completions]
+        assert sum(c.n_frames for c in done) == 3
+        assert "a" not in srv.streams          # reaped once empty
+        assert srv.frames_served() == 3        # drained frames still counted
+
+    def test_unregister_empty_queue_is_immediate(self, fa_setup):
+        ex, frames, fj, base = fa_setup
+        srv = _local_server(ex)
+        srv.register("a", fps=1.0)
+        assert srv.unregister("a") == 0
+        assert "a" not in srv.streams
+
+    def test_empty_tick(self, fa_setup):
+        ex, frames, fj, base = fa_setup
+        srv = _local_server(ex)
+        srv.register("a", fps=1.0)
+        rep = srv.tick(1.0)
+        assert rep.n_ready == 0 and rep.completions == ()
+        assert srv.batch_lat_s == []           # no dispatch, no latency row
+        assert srv.p99_batch_s() == 0.0
+
+    def test_duplicate_register_raises(self, fa_setup):
+        ex, frames, fj, base = fa_setup
+        srv = _local_server(ex)
+        srv.register("a", fps=1.0)
+        with pytest.raises(ValueError, match="already registered"):
+            srv.register("a", fps=1.0)
+
+    def test_capacity_overflow_requeues_without_loss(self, fa_setup):
+        ex, frames, fj, base = fa_setup
+        cfg = ServeConfig(chunk=2, capacity=1, tick_s=1.0, max_queue_s=100.0)
+        srv = StreamingServer(ex, config=cfg)
+        hot = _motion_pair(frames, base)
+        for sid in ("a", "b"):                 # declared rates fit the
+            srv.register(sid, fps=0.5)         # 1-slot compute budget
+            srv.enqueue(sid, hot[0], t=0.0)
+            srv.enqueue(sid, hot[1], t=0.1)
+        rep1 = srv.tick(1.0)                   # both pass the scorer, cap 1
+        assert rep1.n_served == 1 and rep1.n_requeued == 1
+        rep2 = srv.tick(2.0)                   # the requeued chunk drains
+        assert rep2.n_served == 1 and rep2.n_requeued == 0
+        assert srv.frames_served() == 4        # nothing dropped
+        assert sum(s.requeues for s in srv.streams.values()) == 1
+
+    def test_local_admission_compute_budget(self, fa_setup):
+        ex, frames, fj, base = fa_setup
+        cfg = ServeConfig(chunk=2, capacity=1, tick_s=1.0)
+        srv = StreamingServer(ex, config=cfg)   # budget: 1.6 fps x headroom
+        assert srv.register("a", fps=1.0).admitted
+        dec = srv.register("b", fps=1.0)
+        assert not dec.admitted and dec.reason.startswith("compute")
+        assert srv.rejections and srv.rejections[-1].sid == "b"
+
+    def test_offload_admission_rejects_on_starved_link(self, fa_setup):
+        ex, frames, fj, base = fa_setup
+        link = dataclasses.replace(BACKSCATTER, bytes_per_s=1.0)
+        srv = StreamingServer(ex, link=link, config=ServeConfig(chunk=2))
+        dec = srv.register("a", fps=1.0, cut="vj", bits=8)
+        assert not dec.admitted and "uplink" in dec.reason
+
+    def test_offload_admission_replaces_cut_under_pressure(self, fa_setup):
+        ex, frames, fj, base = fa_setup
+        # vj's predicted rate busts a 100 B/s uplink; nn's does not
+        link = dataclasses.replace(BACKSCATTER, bytes_per_s=100.0)
+        srv = StreamingServer(ex, link=link, config=ServeConfig(chunk=2))
+        dec = srv.register("a", fps=1.0, cut="vj", bits=8)
+        assert dec.admitted and dec.cut == "nn"
+        assert "re-placed" in dec.reason
+        assert srv.streams["a"].cut == "nn"
+
+    def test_bad_cut_raises(self, fa_setup):
+        ex, frames, fj, base = fa_setup
+        srv = _local_server(ex)
+        with pytest.raises(ValueError, match="not in"):
+            srv.register("a", fps=1.0, cut="head", bits=8)
+
+
+class TestWindowedResolve:
+    def test_zero_traffic_stream_never_resolves(self, fa_setup, controller):
+        """The PR 7 'zero-fault stream never moves' pin, transplanted: a
+        stream with no traffic accumulates no served frames, so its cut is
+        never re-solved, while a served neighbor's is."""
+        ex, frames, fj, base = fa_setup
+        cfg = ServeConfig(chunk=2, capacity=2, tick_s=1.0, resolve_every=2,
+                          link_window=2, max_queue_s=100.0)
+        srv = StreamingServer(ex, link=BACKSCATTER.scaled(100.0),
+                              controller=controller, config=cfg)
+        srv.register("live", fps=1.0, cut="vj", bits=8)
+        srv.register("idle", fps=1.0, cut="vj", bits=8)
+        hot = _motion_pair(frames, base)
+        before = controller.resolves
+        for k in range(3):
+            srv.enqueue("live", hot[0], t=float(k))
+            srv.enqueue("live", hot[1], t=float(k) + 0.1)
+            srv.tick(float(k + 1))
+        assert srv.streams["live"].resolves >= 1
+        assert controller.resolves > before
+        assert srv.streams["idle"].resolves == 0
+        assert srv.streams["idle"].cut == "vj"          # never moved
+        assert srv.streams["idle"].frames_since_resolve == 0
+
+    def test_observe_folds_into_window_measurements(self, controller):
+        controller._window_obs.clear()
+        controller.observe("vj", units=4, wire_bytes=400.0)
+        controller.observe("vj", units=4, wire_bytes=440.0)
+        rows = {m.cut: m for m in controller.window_measurements()}
+        assert rows["vj"].units == 8
+        assert rows["vj"].wire_bytes == 840.0
+        assert rows["vj"].bytes_per_unit == 105.0
+        # cuts with no live samples keep their calibration rows
+        cal = {m.cut: m for m in controller.measurements}
+        assert rows["nn"].wire_bytes == cal["nn"].wire_bytes
+        controller._window_obs.clear()
+
+    def test_predicted_bytes_take_precedence(self, controller):
+        controller._window_obs.clear()
+        controller.observe("vj", units=4, wire_bytes=400.0)
+        rows = {m.cut: m
+                for m in controller.window_measurements({"vj": 7.0})}
+        assert rows["vj"].wire_bytes == 7.0 * rows["vj"].units
+        controller._window_obs.clear()
+
+    def test_observe_unknown_cut_raises(self, controller):
+        with pytest.raises(ValueError):
+            controller.observe("head", units=1, wire_bytes=1.0)
+
+    def test_resolve_window_counts_and_restores(self, controller):
+        controller._window_obs.clear()
+        saved = list(controller.measurements)
+        before = controller.resolves
+        sol = controller.resolve_window()
+        assert sol.cut_after in FA_CUTS
+        assert controller.resolves == before + 1
+        assert controller.measurements == saved         # table restored
+
+    def test_deadline_filter_and_min_latency_floor(self, controller):
+        controller._window_obs.clear()
+        free = {c: 0.0 for c in FA_CUTS}
+        c0 = controller.resolve_window(deadline_s=1e9,
+                                       cut_latency_s=free).cut_after
+        # make the unconstrained optimum infeasible: best FEASIBLE cut wins
+        lat = {c: (10.0 if c == c0 else 0.0) for c in FA_CUTS}
+        sol = controller.resolve_window(deadline_s=1.0, cut_latency_s=lat)
+        assert sol.cut_after != c0 and lat[sol.cut_after] == 0.0
+        # nothing feasible: the minimum-latency cut is the graceful floor
+        lat = {c: 5.0 + i for i, c in enumerate(FA_CUTS)}
+        sol = controller.resolve_window(deadline_s=1.0, cut_latency_s=lat)
+        assert sol.cut_after == FA_CUTS[0]
+
+
+# ---------------------------------------------------------------------------
+# single-stream bit-identity through the serving path (acceptance pin)
+# ---------------------------------------------------------------------------
+
+
+class TestServeBitIdentity:
+    @pytest.mark.parametrize("cut,bits", [(None, None), ("vj", None)])
+    def test_single_stream_matches_fused_executor(self, fa_setup, cut, bits):
+        from repro.camera.offload import ETH_25G_LINK
+
+        ex, frames, fj, base = fa_setup
+        cfg = ServeConfig(chunk=len(frames), capacity=1, tick_s=1.0,
+                          max_queue_s=1e9)
+        srv = StreamingServer(ex, link=ETH_25G_LINK, config=cfg)
+        dec = srv.register("s", fps=1.0, cut=cut, bits=bits)
+        assert dec.admitted and dec.cut == cut
+        for i, f in enumerate(frames):
+            srv.enqueue("s", f, t=i / len(frames))
+        rep = srv.tick(1.0)
+        (comp,) = rep.completions
+        assert comp.kind == "served" and comp.n_frames == len(frames)
+        for f in _RESULT_FIELDS:
+            assert np.array_equal(np.asarray(comp.result[f]),
+                                  np.asarray(getattr(base, f))), f
+        if cut is None:
+            assert comp.wire_bytes == 0.0
+        else:
+            assert comp.wire_bytes > 0.0
