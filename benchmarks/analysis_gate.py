@@ -7,7 +7,7 @@ tests/test_analysis.py).
 
 Smoke mode runs only the spec-level families (kernel legality +
 cut soundness): they cover every kernel package and every declared cut in
-a couple of seconds, while the jaxpr families re-trace all 34 executor
+a couple of seconds, while the jaxpr families re-trace all 36 executor
 targets (minutes of cascade/NN setup) — that full sweep belongs to the
 non-smoke run and the tier-1 gate test.
 """

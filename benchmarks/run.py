@@ -107,6 +107,18 @@ def _serving(smoke=False):
     return serving.rows(smoke=smoke)
 
 
+@section("serving_chaos")
+def _serving_chaos(smoke=False):
+    # chaos-hardened fleet: GE loss x device-kill x brownout sweep over
+    # one StreamingServer in an 8-device child (BENCH_serving_chaos.json
+    # carries the zero-fault bit-identity pin, exactly-once frame
+    # accounting per cell, the DRR starvation bound, post-recovery p99
+    # vs SLO, and the mid-drive server checkpoint/restore row; rows()
+    # itself asserts the pins)
+    from benchmarks import serving_chaos
+    return serving_chaos.rows(smoke=smoke)
+
+
 @section("analysis")
 def _analysis(smoke=False):
     # static contract gate (BENCH_analysis.json carries the non_baselined

@@ -1,0 +1,507 @@
+"""Chaos-hardened serving fleet benchmark (DESIGN.md §14 acceptance).
+
+Sweeps the §14 fault grid — Gilbert–Elliott stream loss x device-kill
+schedule x client brownout — over a WISPCam fleet on one
+:class:`StreamingServer` and reports, per cell:
+
+* **exactly-once accounting**: every assigned frame seq ends the run
+  delivered once, shed once (surfaced in a ``TickReport``), or still
+  queued — never lost, never double-served (``seq_audit`` + an
+  independent harness-side partition check);
+* **fair shedding**: the maximum DRR service gap of any
+  continuously-backlogged stream against the documented bound
+  ``ceil(R / capacity) + ladder_depth`` ticks;
+* **recovery**: p99 micro-batch dispatch latency measured only *after*
+  the last fault clears (device restored, brownout over) against the
+  serving SLO;
+* the **zero-fault pin**: a run under an inert ``ChaosSpec`` is compared
+  leaf-for-leaf to the same drive with no chaos plane at all — the PR 8
+  serving path — and must be bit-identical.
+
+The worst cell (loss + kill + brownout) additionally browns out the
+*server* mid-drive: the fleet checkpoints at a tick boundary, the server
+object is discarded, and a ``StreamingServer.restore`` resumes the drive
+— the accounting identity must hold across the restart.
+
+The sweep itself runs in a child process with 8 fake CPU devices (the
+pmapped local placement group needs a multi-device host to lose one), via
+``benchmarks.timing.run_json_child``; ``--smoke`` drives a toy fleet over
+a reduced grid, the full run puts 1024 streams through the acceptance
+cells.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import sys
+import tempfile
+
+import numpy as np
+
+_SMOKE_TIMEOUT = 540
+_FULL_TIMEOUT = 3000
+
+
+# ---------------------------------------------------------------------------
+# child: the actual sweep (runs under --xla_force_host_platform_device_count)
+# ---------------------------------------------------------------------------
+
+
+def _specs(mode: str):
+    """The fault grid: (label, loss?, kill?, brownout?) cells."""
+    full = mode == "full"
+    grid = []
+    if full:
+        for lo in (False, True):
+            for ki in (False, True):
+                for br in (False, True):
+                    grid.append((f"loss{int(lo)}_kill{int(ki)}"
+                                 f"_brown{int(br)}", lo, ki, br))
+    else:
+        grid = [("loss0_kill0_brown0", False, False, False),
+                ("loss1_kill0_brown0", True, False, False),
+                ("loss0_kill1_brown0", False, True, False),
+                ("loss0_kill0_brown1", False, False, True),
+                ("loss1_kill1_brown1", True, True, True)]
+    return grid
+
+
+def _make_spec(lo, ki, br, *, ticks, smoke, seed=0):
+    from repro.camera.offload.link import BrownoutModel, GilbertElliott
+    from repro.camera.serve import ChaosSpec
+
+    if smoke:
+        # smoke drives few chunks, so the channel must misbehave fast:
+        # ~50% stationary loss and a single retry surfaces failed_tx and
+        # ladder descent within the short drive
+        loss = GilbertElliott(p_gb=0.3, p_bg=0.3, loss_bad=0.9,
+                              loss_good=0.1) if lo else None
+    else:
+        # acceptance channel, <= 10% stationary:
+        # pi_bad = .05/.50 = 0.1, loss = 0.1 * 0.9 = 0.09
+        loss = GilbertElliott(p_gb=0.05, p_bg=0.45, loss_bad=0.9,
+                              loss_good=0.0) if lo else None
+    # one brownout window inside the drive (smoke: ~6 s on / ~3 s dark;
+    # full: ~6 s on / ~6 s dark so the window clears before recovery is
+    # measured)
+    if br:
+        brown = (BrownoutModel(harvest_w=1e-3, storage_j=3e-3,
+                               load_w=1.5e-3) if smoke else
+                 BrownoutModel(harvest_w=1e-3, storage_j=6e-3,
+                               load_w=2e-3))
+    else:
+        brown = None
+    kill_t, back_t = max(1, ticks // 4), max(2, ticks // 2)
+    events = (((kill_t, "kill", 7), (kill_t, "kill", 6),
+               (kill_t, "kill", 5), (kill_t, "kill", 4),
+               (back_t, "restore", 7), (back_t, "restore", 6),
+               (back_t, "restore", 5), (back_t, "restore", 4))
+              if ki else ())
+    if loss is None and brown is None and not events:
+        return None, 0
+    spec = ChaosSpec(loss=loss, brownout=brown, device_events=events,
+                     max_retries=1 if smoke else 2, seed=seed,
+                     ladder_window=4 if smoke else 8,
+                     ladder_recover_after=4)
+    # the tick after which the fleet counts as recovered: the last
+    # scheduled fault clears (device restore; brownout recharge), plus
+    # the ladder hysteresis window when a loss process kept ladders
+    # active (full mode only — the smoke drive is too short to wait it
+    # out and only asserts liveness)
+    recover_at = back_t + 1 if ki else 0
+    if br and not smoke:
+        dark_end = (brown.storage_j / (brown.load_w - brown.harvest_w)
+                    + brown.storage_j / brown.harvest_w)
+        recover_at = max(recover_at, int(math.ceil(dark_end)) + 1)
+    if lo and not smoke and recover_at:
+        recover_at += spec.ladder_recover_after + 1
+    if br and smoke:
+        recover_at = max(recover_at, back_t + 1)
+    return spec, recover_at
+
+
+class _CellHarness:
+    """Feeds one fleet, logs seqs, and tracks backlog service gaps."""
+
+    def __init__(self, srv, specs, engine):
+        self.srv = srv
+        self.specs = specs        # sid -> (video, offset, frames_per_tick)
+        self.engine = engine
+        self.delivered: dict = {sid: [] for sid in specs}
+        self.shed: dict = {sid: [] for sid in specs}
+        self.gap: dict = {sid: 0 for sid in specs}
+        self.max_gap = 0
+        self.max_backlogged = 0
+        self.events = []
+        self.ladder_moves = 0
+        self.failed_tx = 0
+        self.t = 0.0
+
+    def drive(self, ticks):
+        srv, cfg = self.srv, self.srv.cfg
+        for _ in range(ticks):
+            live = srv.streams
+            for sid, (video, off, n) in self.specs.items():
+                st = live.get(sid)
+                if st is None:
+                    continue
+                if self.engine is not None and \
+                        not self.engine.node_powered(sid, self.t):
+                    continue          # dark camera: nothing was captured
+                for j in range(n):
+                    idx = (off + st.seq_next) % len(video)
+                    srv.enqueue(sid, video[idx], t=self.t + j / max(n, 1))
+            backlogged = [sid for sid, st in srv.streams.items()
+                          if len(st.queue) >= cfg.chunk]
+            self.max_backlogged = max(self.max_backlogged, len(backlogged))
+            self.t += cfg.tick_s
+            rep = srv.tick(self.t)
+            got = set()
+            for c in rep.completions:
+                self.delivered[c.sid].extend(c.seqs)
+                got.add(c.sid)
+            for s in rep.shed:
+                self.shed[s.sid].extend(s.seqs)
+            for sid in backlogged:
+                if sid in got:
+                    self.gap[sid] = 0
+                else:
+                    self.gap[sid] += 1
+                    self.max_gap = max(self.max_gap, self.gap[sid])
+            for sid in list(self.gap):
+                if sid not in backlogged and sid not in got:
+                    self.gap[sid] = 0
+            self.events.extend(rep.device_events)
+            self.ladder_moves += len(rep.ladder_moves)
+            self.failed_tx += rep.n_failed_tx
+
+    def adopt(self, srv):
+        """Point the harness at a restored server (server brownout)."""
+        self.srv = srv
+
+    def exactly_once(self):
+        """Harness-side partition proof, independent of ``seq_audit``:
+        delivered + shed + still-queued seqs tile ``range(seq_next)``
+        exactly, per stream — across restarts, because the logs span the
+        whole drive while the counters live in the checkpoint."""
+        for sid in self.specs:
+            st = self.srv.streams.get(sid)
+            if st is None:
+                return False
+            queued = [e[2] for e in st.queue]
+            seen = self.delivered[sid] + self.shed[sid] + queued
+            if len(seen) != st.seq_next:
+                return False
+            if sorted(seen) != list(range(st.seq_next)):
+                return False
+        return True
+
+
+def _build_fleet(ex, ctl, link, cfg, pools, spec, *, n_local, n_off,
+                 off_feed, shared_steps, shared_execs, prewarm_kill):
+    from repro.camera.serve import StreamingServer
+
+    quiet, hot = pools
+    srv = StreamingServer(ex, link=link, controller=ctl, config=cfg,
+                          chaos=spec)
+    srv._group_steps = shared_steps       # reuse compiled placement groups
+    srv._offload_execs = shared_execs     # across cells (same cfg/devices)
+    specs = {}
+    for k in range(n_local):
+        sid = f"l{k}"
+        dec = srv.register(sid, fps=0.5, motion_frac=0.1)
+        assert dec.admitted, dec
+        vid = quiet[k % len(quiet)]
+        specs[sid] = (vid, (k * 7) % len(vid), 1)
+    for k in range(n_off):
+        sid = f"o{k}"
+        hot_one = k % 8 == 7              # 1-in-8 motion-heavy streams
+        vid = (hot[k % len(hot)] if hot_one else quiet[k % len(quiet)])
+        dec = srv.register(sid, fps=1.0, cut="vj", bits=8,
+                           motion_frac=0.3 if hot_one else 0.1)
+        assert dec.admitted, dec
+        specs[sid] = (vid, (k * 5) % len(vid), off_feed)
+    # every group step a tick can reach must be compiled ahead of the
+    # measured drive (the §13 contract): the granted rung, every ladder
+    # rung below it (including the controller's cheapest-bytes retreat
+    # cut), every cut a windowed re-solve can grant, and the local
+    # group.  The big-model shape is capacity-static, so one bucket per
+    # rung suffices; buckets only size the eager scorer stack.
+    from repro.camera.serve import FA_CUTS
+
+    rungs = [(None, None)] + [(c, b) for c in FA_CUTS for b in (8, 4)]
+    srv.prewarm(rungs, max_ready=n_local + n_off + cfg.capacity,
+                device_counts=(4,) if prewarm_kill else ())
+    return srv, specs
+
+
+def _run_cell(label, lo, ki, br, env, *, n_local, n_off, ticks,
+              off_feed=1, smoke=True, server_brownout=False):
+    from repro.camera.serve import ChaosEngine, StreamingServer
+
+    ex, ctl, link, cfg, pools, shared_steps, shared_execs = env
+    spec, recover_at = _make_spec(lo, ki, br, ticks=ticks, smoke=smoke)
+    srv, specs = _build_fleet(
+        ex, ctl, link, cfg, pools, spec, n_local=n_local, n_off=n_off,
+        off_feed=off_feed, shared_steps=shared_steps,
+        shared_execs=shared_execs, prewarm_kill=ki)
+    engine = srv._chaos
+    h = _CellHarness(srv, specs, engine)
+
+    restored_exact = None
+    lat_prefix = []
+    if server_brownout:
+        # first half, then the server browns out: checkpoint at the tick
+        # boundary, drop the object, restore, finish the drive
+        half = ticks // 2
+        h.drive(half)
+        with tempfile.TemporaryDirectory() as td:
+            srv.checkpoint(td)
+            audit_before = srv.seq_audit()
+            lat_prefix = list(srv.batch_lat_s)
+            del srv
+            srv = StreamingServer.restore(td, ex, link=link,
+                                          controller=ctl, config=cfg,
+                                          chaos=spec)
+            srv._group_steps = shared_steps
+            srv._offload_execs = shared_execs
+            restored_exact = srv.seq_audit() == audit_before
+            h.adopt(srv)
+            h.drive(ticks - half)
+    else:
+        h.drive(ticks)
+
+    # recovery: measure p99 only after the last scheduled fault clears
+    post = [s for s in srv.batch_lat_s]
+    if recover_at and len(srv.batch_lat_s) > 2:
+        post = srv.batch_lat_s[-max(ticks - recover_at, 2):]
+    post_p99 = float(np.quantile(np.asarray(post), 0.99)) if post else 0.0
+
+    audit = srv.seq_audit()
+    ladder_depth = 4                      # (vj,8)->(vj,4)->cheapest->on_node
+    bound = (math.ceil(h.max_backlogged / max(cfg.capacity, 1))
+             + ladder_depth)
+    return {
+        "label": label, "n_streams": len(srv.streams), "ticks": ticks,
+        "delivered": audit["delivered"], "shed": audit["shed"],
+        "queued": audit["queued"], "enqueued": audit["enqueued"],
+        "audit_ok": bool(audit["ok"]), "exactly_once": h.exactly_once(),
+        "failed_tx": h.failed_tx, "ladder_moves": h.ladder_moves,
+        "device_events": len(h.events),
+        "kill_fired": sum(1 for k, _ in h.events if k == "kill"),
+        "p99_batch_s": srv.p99_batch_s(), "post_recovery_p99_s": post_p99,
+        "slo_s": cfg.slo_s, "post_recovery_slo_ok": post_p99 <= cfg.slo_s,
+        "max_gap_ticks": h.max_gap, "gap_bound_ticks": bound,
+        "gap_ok": h.max_gap <= bound,
+        "max_backlogged": h.max_backlogged,
+        "restored_exact": restored_exact,
+        "lat_s": [round(x, 3) for x in lat_prefix + list(srv.batch_lat_s)],
+        "recover_at": recover_at,
+        "retx_factor": (ChaosEngine(spec).retx_factor("o0")
+                        if spec is not None else 1.0),
+    }
+
+
+def _bitexact_pair(ex, link, cfg, pools, ticks=3):
+    """Drive the same tiny fleet with chaos=None (the PR 8 serving path)
+    and with an inert ChaosSpec; compare every completion leaf."""
+    from repro.camera.serve import ChaosSpec, StreamingServer
+
+    quiet, hot = pools
+
+    def run(chaos):
+        srv = StreamingServer(ex, link=link, config=cfg, chaos=chaos)
+        for k in range(4):
+            dec = srv.register(f"s{k}", fps=0.5, cut="vj" if k % 2 else None,
+                               bits=8 if k % 2 else None, motion_frac=0.1)
+            assert dec.admitted, dec
+        reps = []
+        t = 0.0
+        for i in range(ticks):
+            for k in range(4):
+                vid = hot[k % len(hot)]
+                st = srv.streams[f"s{k}"]
+                for j in range(cfg.chunk):
+                    srv.enqueue(f"s{k}",
+                                vid[(st.seq_next) % len(vid)], t=t)
+            t += cfg.tick_s
+            reps.append(srv.tick(t))
+        return reps
+
+    plain, inert = run(None), run(ChaosSpec())
+    for rp, ri in zip(plain, inert):
+        if (rp.n_served, rp.n_quiet, rp.n_requeued, rp.bytes_sent) != \
+                (ri.n_served, ri.n_quiet, ri.n_requeued, ri.bytes_sent):
+            return False
+        if ri.shed != () or ri.n_failed_tx or ri.ladder_moves:
+            return False
+        for cp, ci in zip(rp.completions, ri.completions):
+            if cp.sid != ci.sid or cp.seqs != ci.seqs or \
+                    cp.wire_bytes != ci.wire_bytes:
+                return False
+            for k, v in cp.result.items():
+                if not np.array_equal(np.asarray(v),
+                                      np.asarray(ci.result[k])):
+                    return False
+    return True
+
+
+def _child(mode: str):
+    import dataclasses
+
+    import jax
+
+    from benchmarks.serving import _mean_chunk_bytes, _setup
+    from repro.camera.offload import BACKSCATTER
+    from repro.camera.serve import ServeConfig
+
+    assert jax.local_device_count() == 8, "chaos sweep wants 8 fake devices"
+    smoke = mode != "full"
+    ex, ctl, quiet, hot, calib = _setup(smoke)
+    if smoke:
+        cfg = ServeConfig(chunk=2, capacity=8, slo_s=2.5, tick_s=1.0,
+                          max_queue_s=8.0, resolve_every=8, link_window=2,
+                          admit_util=0.9, stats_window=8,
+                          max_queue_frames=5)
+        n_local, n_off, ticks = 8, 16, 9
+    else:
+        # chunk=2 keeps the worst tick's dispatch bill under the SLO
+        # even when degradation ladders hold three offload groups live
+        # at once; capacity stays at the §13 full-bench 96 slots
+        cfg = ServeConfig(chunk=2, capacity=96, slo_s=2.5, tick_s=1.0,
+                          max_queue_s=8.0, resolve_every=32, link_window=4,
+                          admit_util=0.9, stats_window=8,
+                          max_queue_frames=8)
+        n_local, n_off, ticks = 64, 192, 12
+
+    # provision the uplink like the §13 bench: measured vj bytes with
+    # headroom, widened for the chaos cells' retransmission inflation;
+    # sized for the largest (acceptance-scale) cell of the sweep
+    q_chunk_b = _mean_chunk_bytes(ex, quiet[:2], "vj", 8, cfg.chunk)
+    fleet_bps = (960 if not smoke else n_off) * q_chunk_b / cfg.chunk
+    link = BACKSCATTER.scaled(max(fleet_bps / 0.35, 1.0)
+                              / BACKSCATTER.bytes_per_s)
+
+    shared_steps: dict = {}
+    shared_execs: dict = {}
+    env = (ex, ctl, link, cfg, (quiet, hot), shared_steps, shared_execs)
+
+    bit_cfg = dataclasses.replace(cfg, capacity=8)
+    bitexact = _bitexact_pair(ex, link, bit_cfg, (quiet, hot))
+
+    cells = []
+    for label, lo, ki, br in _specs(mode):
+        worst = lo and ki and br
+        nl, no, tk = n_local, n_off, ticks
+        if not smoke and (worst or not (lo or ki or br)):
+            # acceptance cells at the 1024-stream scale
+            nl, no, tk = 64, 960, 21
+        # offloaded feed rate deliberately exceeds the per-stream drain
+        # ceiling (one chunk per gather): bounded queues must shed, and
+        # the shed must be fair and fully accounted
+        cells.append(_run_cell(label, lo, ki, br, env, n_local=nl,
+                               n_off=no, ticks=tk,
+                               off_feed=cfg.chunk + 1,
+                               smoke=smoke, server_brownout=worst))
+    print(json.dumps({"mode": mode, "zero_fault_bitexact": int(bitexact),
+                      "n_devices": jax.local_device_count(),
+                      "cells": cells}))
+
+
+# ---------------------------------------------------------------------------
+# parent: rows for benchmarks.run
+# ---------------------------------------------------------------------------
+
+
+def rows(smoke: bool = False):
+    from benchmarks.timing import run_json_child
+
+    mode = "smoke" if smoke else "full"
+    data = run_json_child(["benchmarks.serving_chaos", "--child", mode],
+                          n_devices=8,
+                          timeout=_SMOKE_TIMEOUT if smoke
+                          else _FULL_TIMEOUT)
+    assert data is not None, "serving_chaos child failed"
+    out = [("serving_chaos", "zero_fault_bitexact",
+            str(data["zero_fault_bitexact"]),
+            "inert ChaosSpec vs no chaos plane: every completion leaf "
+            "bit-identical (the PR 8 serving path)")]
+    worst = None
+    for c in data["cells"]:
+        if c["label"] == "loss1_kill1_brown1":
+            worst = c
+        out.append((
+            "serving_chaos", f"cell_{c['label']}",
+            "1" if (c["audit_ok"] and c["exactly_once"]) else "0",
+            f"streams={c['n_streams']} ticks={c['ticks']} "
+            f"delivered={c['delivered']} shed={c['shed']} "
+            f"queued={c['queued']} failed_tx={c['failed_tx']} "
+            f"ladder_moves={c['ladder_moves']} kills={c['kill_fired']} "
+            f"gap={c['max_gap_ticks']}/{c['gap_bound_ticks']} "
+            f"p99={c['p99_batch_s']:.3f}s "
+            f"post_p99={c['post_recovery_p99_s']:.3f}s"))
+    assert worst is not None, "worst cell missing from sweep"
+    out.append(("serving_chaos", "worst_cell_exactly_once",
+                "1" if (worst["audit_ok"] and worst["exactly_once"]) else
+                "0",
+                f"loss+kill+brownout at {worst['n_streams']} streams: "
+                f"{worst['enqueued']} enqueued = {worst['delivered']} "
+                f"delivered + {worst['shed']} shed + {worst['queued']} "
+                "queued, across a server restart"))
+    out.append(("serving_chaos", "server_brownout_restore",
+                "1" if worst["restored_exact"] else "0",
+                "checkpoint -> discard server -> restore mid-drive: "
+                "seq audit identical across the restart"))
+    out.append(("serving_chaos", "post_recovery_p99_s",
+                f"{worst['post_recovery_p99_s']:.4f}",
+                f"SLO={worst['slo_s']}s measured after device restore + "
+                "brownout window"))
+    out.append(("serving_chaos", "starvation_gap",
+                f"{worst['max_gap_ticks']}",
+                f"bound=ceil(R/capacity)+ladder_depth="
+                f"{worst['gap_bound_ticks']} ticks "
+                f"(R={worst['max_backlogged']})"))
+    out.append(("serving_chaos", "retx_admission_factor",
+                f"{worst['retx_factor']:.3f}",
+                "admission bps inflation for faulty streams "
+                "(1/(1-stationary_loss))"))
+
+    assert data["zero_fault_bitexact"] == 1, \
+        "inert chaos diverged from the PR 8 serving path"
+    zero = next(c for c in data["cells"]
+                if c["label"] == "loss0_kill0_brown0")
+    assert zero["shed"] > 0, \
+        "the offered overload never exercised the fair shedder"
+    out.append(("serving_chaos", "overload_shed_frames",
+                str(zero["shed"]),
+                f"zero-fault cell, offered load above the per-stream "
+                f"drain ceiling: oldest-first DRR "
+                f"shed, every seq surfaced ({zero['delivered']} delivered"
+                f" + {zero['shed']} shed + {zero['queued']} queued = "
+                f"{zero['enqueued']})"))
+    for c in data["cells"]:
+        assert c["audit_ok"] and c["exactly_once"], \
+            f"frame accounting broke in cell {c['label']}: {c}"
+        assert c["gap_ok"], \
+            f"starvation bound violated in cell {c['label']}: {c}"
+    assert worst["restored_exact"], "server restore changed the audit"
+    assert worst["post_recovery_slo_ok"], \
+        f"post-recovery p99 {worst['post_recovery_p99_s']:.3f}s over SLO"
+    kill_cells = [c for c in data["cells"] if "kill1" in c["label"]]
+    assert kill_cells and all(c["kill_fired"] == 4 for c in kill_cells), \
+        "device-kill schedule did not fire"
+    loss_cells = [c for c in data["cells"]
+                  if "loss1" in c["label"]]
+    assert any(c["failed_tx"] > 0 or c["ladder_moves"] > 0
+               for c in loss_cells), \
+        "loss cells produced no observable fault symptoms"
+    return out
+
+
+if __name__ == "__main__":
+    if "--child" in sys.argv:
+        _child(sys.argv[-1])
+    else:
+        for r in rows(smoke="--smoke" in sys.argv):
+            print(",".join(str(c) for c in r))

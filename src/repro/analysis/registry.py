@@ -172,6 +172,33 @@ def build_targets():
         (sframes,) + tuple(off8._consts),
         lut_pairs=((fa.lut, fa.lut_meta),)))
 
+    # chaos-plane jit units (DESIGN.md §14): the degraded placement-group
+    # step a ladder rung below the granted cut (bits=4 is a precision
+    # surface no §10 offload target covers), and the restore path's first
+    # traced compute — chunk motion scoring over queue stacks rebuilt
+    # from a server checkpoint
+    off4 = FaceAuthOffloadExecutor(fa, "vj", bits=4, use_pallas=False)
+
+    def group_one_degraded(fr, *c):
+        arrays, wire_b = off4._node_fn(fr, *c)
+        out = dict(off4._cloud_fn(arrays, *c, frames_shape=gshape))
+        out["wire_b"] = wire_b
+        return out
+
+    targets.append(ExecutorTarget(
+        "serve.group_step_degraded[vj,4]",
+        jax.vmap(group_one_degraded,
+                 in_axes=(0,) + (None,) * len(off4._consts)),
+        (sframes,) + tuple(off4._consts),
+        lut_pairs=((fa.lut, fa.lut_meta),)))
+
+    from repro.camera.serve.runtime import chunk_motion_scores
+
+    targets.append(ExecutorTarget(
+        "serve.restore_rescore",
+        ft.partial(chunk_motion_scores, motion_factor=fa.motion_factor),
+        (sframes,)))
+
     def admit_path(reqs):
         scorer = lambda x: jnp.mean(jnp.abs(x), axis=(1, 2, 3))  # noqa: E731
         return cascade_serve(scorer, lambda x: {"y": x * 2.0}, reqs,

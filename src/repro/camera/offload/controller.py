@@ -359,27 +359,42 @@ class CutController:
         finally:
             self.measurements = saved
 
-    def degradation_ladder(self, *, bits_ladder=(16, 8, 4), **ladder_kw):
-        """Build the resilience ladder from this controller's calibration.
+    def degradation_rungs(self, cut: str | None = None,
+                          *, bits_ladder=(16, 8, 4)) -> list:
+        """Ordered ``(cut, bits)`` rung list for one granted placement.
 
-        Rung 0 is the solver-chosen cut at the widest codec; faults walk
-        it down through narrower codecs, then retreat to the
-        measured-cheapest-bytes cut (the calibration table's own answer
-        to "which cut survives a starved link"), and finally to the
-        all-on-node terminal rung.  Raises the same cut-naming
-        ``ValueError`` family as :meth:`choose` on calibration holes.
+        Rung 0 is ``cut`` (the solver's choice when None) at the widest
+        codec; faults walk it down through narrower codecs, then retreat
+        to the measured-cheapest-bytes cut (the calibration table's own
+        answer to "which cut survives a starved link"), and finally to
+        the all-on-node terminal rung.  The serving runtime calls this
+        per stream with the placement *admission granted* (DESIGN.md
+        §14), which may differ from the fleet-global solver choice —
+        the ladder degrades the stream it protects, not a hypothetical
+        one.
         """
-        from repro.camera.offload.resilience import ON_NODE, DegradationLadder
+        from repro.camera.offload.resilience import ON_NODE
 
         self._validated_measurements()
-        chosen = self.choose().cut_after
-        rungs = [(chosen, b) for b in bits_ladder]
+        if cut is None:
+            cut = self.choose().cut_after
+        elif cut not in self.cuts:
+            raise ValueError(f"cut {cut!r} not in {tuple(self.cuts)}")
+        rungs = [(cut, b) for b in bits_ladder]
         cheapest = min(self.measurements,
                        key=lambda m: m.bytes_per_unit).cut
-        if cheapest != chosen:
+        if cheapest != cut:
             rungs.append((cheapest, bits_ladder[-1]))
         rungs.append(ON_NODE)
-        return DegradationLadder(rungs, **ladder_kw)
+        return rungs
+
+    def degradation_ladder(self, *, bits_ladder=(16, 8, 4), **ladder_kw):
+        """Build the resilience ladder from this controller's calibration
+        (:meth:`degradation_rungs` at the solver-chosen cut)."""
+        from repro.camera.offload.resilience import DegradationLadder
+
+        return DegradationLadder(
+            self.degradation_rungs(bits_ladder=bits_ladder), **ladder_kw)
 
     # -- 4. audit ------------------------------------------------------------
 

@@ -635,7 +635,7 @@ class FaceAuthExecutor:
                                            *self._consts))
 
     def batch_step(self, n_streams: int, chunk: int,
-                   stream_parallel: bool | None = None):
+                   stream_parallel: bool | None = None, devices=None):
         """Re-entrant capacity-padded micro-batch step for the serving
         runtime (DESIGN.md §13).
 
@@ -651,18 +651,36 @@ class FaceAuthExecutor:
         One jit dispatch per call: the same ``FunnelStages`` funnel vmapped
         across the stream axis, with one pmap shard per device when
         ``stream_parallel`` and the device count divides ``n_streams``.
-        Closures are cached per ``(n_streams, chunk)`` and invalidated by
-        :meth:`calibrate`'s rebuild, so a scheduler can call the step every
-        tick without retracing.
+        ``devices`` restricts the pmap to an explicit device subset — the
+        failover path (DESIGN.md §14): a serving runtime that loses a
+        device re-requests the closure over the survivors, and falls back
+        to the single-device vmap jit when they stop dividing the batch.
+        Closures are cached per ``(n_streams, chunk, device-set)`` and
+        invalidated by :meth:`calibrate`'s rebuild, so a scheduler can call
+        the step every tick without retracing.
         """
         import jax
         import jax.numpy as jnp
 
         if stream_parallel is None:
             stream_parallel = self.stream_parallel
-        ndev = jax.local_device_count()
+        if devices is not None:
+            devices = tuple(devices)
+            if not devices:
+                raise ValueError("batch_step: devices must be non-empty "
+                                 "when given — a group with zero devices "
+                                 "cannot serve")
+            ndev = len(devices)
+        else:
+            ndev = jax.local_device_count()
         use_pmap = bool(stream_parallel) and ndev > 1 and n_streams % ndev == 0
-        key = (int(n_streams), int(chunk), use_pmap)
+        if not use_pmap:
+            # the vmap fallback never touches `devices`; normalizing the
+            # key means failing over to it (survivors stop dividing the
+            # batch) reuses the already-compiled single-device closure
+            devices = None
+        key = (int(n_streams), int(chunk), use_pmap,
+               None if devices is None else tuple(d.id for d in devices))
         cached = self._batch_steps.get(key)
         if cached is not None:
             return cached
@@ -681,7 +699,9 @@ class FaceAuthExecutor:
 
         if use_pmap:
             shard = jax.pmap(step_core,
-                             in_axes=(0, 0) + (None,) * len(consts))
+                             in_axes=(0, 0) + (None,) * len(consts),
+                             devices=None if devices is None
+                             else list(devices))
 
             def step(frames, valid):
                 self._check_step_args(frames, valid, n_streams, chunk)

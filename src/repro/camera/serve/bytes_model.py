@@ -58,3 +58,28 @@ def fa_quiet_bytes(cut: str, bits: int | None, *, frames: int, h: int,
     """Bytes a chunk with no motion still costs at ``cut``."""
     return fa_cut_bytes(cut, bits, frames=frames, h=h, w=w,
                         motion_frames=0.0, valid_windows=0.0, block=block)
+
+
+def fa_attempt_bytes(wire_b: float, attempts: int = 1) -> float:
+    """On-air bytes of ``attempts`` chaos-plane transmissions of one
+    payload (DESIGN.md §14).
+
+    Every attempt — delivered or not — re-ships the payload plus the §12
+    session sideband (seq/crc/attempt), so retries congest the shared
+    uplink exactly like ``OffloadSession`` retries do.
+    """
+    from repro.camera.offload.payloads import SESSION_SIDEBAND_BYTES
+
+    if attempts < 0:
+        raise ValueError(f"attempts must be >= 0, got {attempts}")
+    return float(attempts) * (float(wire_b) + SESSION_SIDEBAND_BYTES)
+
+
+def fa_decision_bytes(frames: int) -> float:
+    """Wire bytes of the all-on-node terminal rung's decision beacon.
+
+    Mirrors ``resilience``'s decision accounting: one packed auth bit per
+    frame plus one i32 count — what a ladder-bottomed stream still ships
+    so the fleet monitor can tell "degraded but alive" from "dead".
+    """
+    return max(int(frames), 0) * _BOOL_B + _I32_B

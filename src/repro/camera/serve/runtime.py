@@ -1,7 +1,7 @@
-"""Continuous streaming serving runtime (DESIGN.md §13).
+"""Continuous streaming serving runtime (DESIGN.md §13, chaos plane §14).
 
-Serves N heterogeneous camera streams on one serving device — the
-WISPCam fleet shape: thousands of harvested-energy cameras sharing one
+Serves N heterogeneous camera streams on one serving host — the WISPCam
+fleet shape: thousands of harvested-energy cameras sharing one
 backscatter uplink into a cloud that runs (part of) the §III funnel.
 Streams register and leave dynamically; frames queue per stream; every
 scheduler tick forms capacity-padded micro-batches and pushes them
@@ -30,9 +30,40 @@ ROADMAP items: measured per-tick byte traces replay through
 stream's sliding-window funnel stats drive a
 ``CutController.resolve_window`` re-solve with the link report's
 ``p99_latency_s`` as the deadline constraint — congestion rises, cuts
-retreat toward fewer wire bytes.  A zero-traffic stream accumulates no
-served frames and therefore never triggers a re-solve (the PR 7
-"zero-fault stream never moves" pin, transplanted).
+retreat toward fewer wire bytes.
+
+**The §14 chaos plane** hardens all of the above against hostile fleets:
+
+* every frame carries a per-stream sequence number; queues are *bounded*
+  (``ServeConfig.max_queue_frames``) and overload sheds oldest-first,
+  with every shed frame surfaced per-stream in the next
+  :class:`TickReport` — never silently dropped;
+* micro-batch slots are granted in **deficit-round-robin** order: each
+  stream with an eligible chunk accrues one chunk-quantum of deficit per
+  tick and spends it on service, so the cascade's keep-lowest-indices
+  capacity drop implements fair rotation instead of
+  first-registered-wins.  A continuously-backlogged stream is served at
+  least once every ``ceil(R / capacity)`` ticks (R = backlogged streams
+  on its rung) — the documented starvation bound;
+* a :class:`~repro.camera.serve.chaos.ChaosEngine` injects per-stream
+  link faults (each served offloaded chunk transits its stream's seeded
+  ``FaultInjector`` with bounded retries, every attempt charged real
+  uplink bytes) and scripted device-loss events — a pmapped local
+  placement group that loses a device re-shards over the survivors
+  within one tick (vmap fallback when they stop dividing);
+* each faulty offloaded stream carries a serve-driven
+  ``DegradationLadder`` fed by fleet symptoms (delivery failures,
+  retransmit fraction, deadline misses widened by the link report's
+  p99): sustained faults walk the stream down to narrower codecs, the
+  cheapest cut, finally all-on-node; ``recover_after`` clean deliveries
+  walk it back up.  While a ladder holds a stream below rung 0 the
+  windowed ``resolve_window`` skips it — the ladder has the wheel during
+  an incident, the solver gets it back in the clean state;
+* :meth:`StreamingServer.checkpoint` persists the full server state at a
+  tick boundary through ``ckpt/checkpoint.py`` and
+  :meth:`StreamingServer.restore` rebuilds a server that resumes with no
+  frame lost or double-served — :meth:`StreamingServer.seq_audit` proves
+  the accounting.
 """
 
 from __future__ import annotations
@@ -44,16 +75,73 @@ from collections import deque
 import numpy as np
 
 from repro.camera.serve.bytes_model import (FA_CUTS, fa_cut_bytes,
+                                            fa_decision_bytes,
                                             fa_quiet_bytes)
 
 _RESULT_KEYS = ("motion", "n_windows", "n_auth", "scores", "window_id",
                 "window_valid", "auth", "windows_dropped", "motion_dropped",
                 "cascade_dropped")
 
+# the resilience module's terminal rung, by value (see resilience.ON_NODE)
+_ON_NODE = ("on_node", None)
+
+
+class ServeError(ValueError):
+    """Named serving-layer contract violation (DESIGN.md §14).
+
+    Subclasses ``ValueError`` so pre-§14 callers that caught the bare
+    errors keep working; new callers catch the named family.
+    """
+
+
+class UnknownStreamError(ServeError):
+    """An operation referenced a stream id the server does not know."""
+
+    def __init__(self, sid, known):
+        known = sorted(known)
+        shown = ", ".join(repr(s) for s in known[:8])
+        if len(known) > 8:
+            shown += f", ... ({len(known)} total)"
+        super().__init__(
+            f"unknown stream {sid!r}; known streams: [{shown}]"
+            if known else
+            f"unknown stream {sid!r}; no streams are registered")
+        self.sid = sid
+
+
+class StreamDrainingError(ServeError):
+    """The sid is still draining — re-register after the drain completes."""
+
+    def __init__(self, sid, frames_left):
+        super().__init__(
+            f"stream {sid!r} is draining ({frames_left} frames still "
+            "queued); re-registering now would clobber them — wait for "
+            "the drain to complete")
+        self.sid = sid
+        self.frames_left = frames_left
+
+
+def chunk_motion_scores(chunks, motion_factor):
+    """Chunk motion energy — the cascade's cheap scorer.
+
+    ``chunks`` is ``(n, chunk, h, w)``; returns the max intra-chunk
+    transition score per chunk (``-inf`` for single-frame chunks, which
+    can never clear a strictly-positive threshold).  Module-level so the
+    §11 analyzer can trace the admission scorer without a live server.
+    """
+    import jax.numpy as jnp
+
+    from repro.camera.motion import motion_score
+
+    if chunks.shape[1] < 2:
+        return jnp.full((chunks.shape[0],), -np.inf, jnp.float32)
+    sc = motion_score(chunks[:, :-1], chunks[:, 1:], motion_factor)
+    return jnp.max(sc, axis=-1)
+
 
 @dataclasses.dataclass(frozen=True)
 class ServeConfig:
-    """Scheduler contract knobs (DESIGN.md §13)."""
+    """Scheduler contract knobs (DESIGN.md §13/§14)."""
 
     chunk: int = 4              # frames per micro-batch slot
     capacity: int = 8           # micro-batch slots per placement group/tick
@@ -67,6 +155,8 @@ class ServeConfig:
     admit_motion_frac: float = 0.5   # activity prior for undeclared streams
     admit_windows_per_frame: float = 2.0
     stats_window: int = 32      # chunks of funnel stats per stream window
+    max_queue_frames: int = 64  # per-stream queue bound; overflow sheds
+                                # oldest-first (0 disables the bound)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -90,6 +180,16 @@ class Completion:
     kind: str                   # "served" | "quiet"
     result: dict                # FAExecResult fields, leading axis n_frames
     wire_bytes: float
+    seqs: tuple = ()            # per-frame sequence numbers, len n_frames
+
+
+@dataclasses.dataclass(frozen=True)
+class ShedRecord:
+    """Frames shed from one stream's bounded queue — surfaced, not silent."""
+
+    sid: str
+    seqs: tuple                 # shed frames' sequence numbers, oldest first
+    arrivals: tuple             # their enqueue times
 
 
 @dataclasses.dataclass(frozen=True)
@@ -104,6 +204,10 @@ class TickReport:
     completions: tuple          # (Completion, ...)
     resolves_fired: int
     cut_changes: tuple          # ((sid, old_cut, new_cut), ...)
+    shed: tuple = ()            # (ShedRecord, ...) since the last tick
+    n_failed_tx: int = 0        # chunks whose delivery exhausted retries
+    ladder_moves: tuple = ()    # ((sid, old_level, new_level), ...)
+    device_events: tuple = ()   # (("kill"|"restore", device_index), ...)
 
 
 @dataclasses.dataclass
@@ -113,13 +217,22 @@ class _Stream:
     cut: str | None
     bits: int | None
     t_join: float
-    queue: deque                # (t_arrival, frame) FIFO
+    queue: deque                # (t_arrival, frame, seq) FIFO, seq ascending
     draining: bool = False
     frames_done: int = 0
     frames_since_resolve: int = 0
     resolves: int = 0
     requeues: int = 0
     declared_bps: float = 0.0
+    seq_next: int = 0           # next sequence number to assign
+    delivered_n: int = 0        # frames delivered in completions
+    last_served_seq: int = -1   # highest seq ever delivered (monotone)
+    shed_n: int = 0             # frames shed from the bounded queue
+    tx_failures: int = 0        # chunk deliveries that exhausted retries
+    deficit: float = 0.0        # DRR service credit, in frames
+    order: int = 0              # registration rank (DRR tiebreak)
+    ladder: object = None       # DegradationLadder | None (chaos plane)
+    pending_shed: list = dataclasses.field(default_factory=list)
     stats: deque = dataclasses.field(
         default_factory=lambda: deque(maxlen=32))   # (n, motion, windows)
     trace: deque = dataclasses.field(
@@ -128,6 +241,12 @@ class _Stream:
 
     @property
     def rung(self):
+        """Effective placement: the ladder's rung while it holds the
+        stream below rung 0 (``ON_NODE`` maps to the local group), the
+        granted ``(cut, bits)`` otherwise."""
+        if self.ladder is not None and self.ladder.level > 0:
+            r = tuple(self.ladder.rung)
+            return (None, None) if r == _ON_NODE else r
         return (self.cut, self.bits if self.cut is not None else None)
 
     def window_stats(self):
@@ -144,6 +263,7 @@ class _ReadyChunk:
     sid: str
     frames: np.ndarray          # (chunk, h, w) f32, padded with last frame
     arrivals: tuple             # simulated arrival times, len n_real
+    seqs: tuple                 # per-frame sequence numbers, len n_real
     n_real: int
 
 
@@ -153,11 +273,16 @@ class StreamingServer:
     ``base`` must be calibrated.  ``controller`` (a ``CutController``
     calibrated for the same base) enables windowed per-stream cut
     re-solves; without it, granted cuts are static.  ``link`` is the
-    shared uplink every offloaded stream transmits on.
+    shared uplink every offloaded stream transmits on.  ``chaos`` (a
+    :class:`~repro.camera.serve.chaos.ChaosSpec` or ``ChaosEngine``)
+    arms the §14 fault plane; None — or an inert spec — leaves every
+    served output bit-identical to the pre-chaos runtime.
     """
 
     def __init__(self, base, *, link=None, controller=None,
-                 config: ServeConfig = ServeConfig()):
+                 config: ServeConfig = ServeConfig(), chaos=None):
+        import jax
+
         from repro.camera.offload.link import BACKSCATTER
 
         self.base = base
@@ -175,10 +300,31 @@ class StreamingServer:
         self.queue_delay_s: list = []    # simulated frame sojourn times
         self.last_link_report = None
         self.rejections: list = []
+        self.total_enqueued = 0          # fleet seq-accounting counters:
+        self.total_delivered = 0         # survive stream churn so the
+        self.total_shed = 0              # audit holds across reaps
+        self._order_counter = 0
+        self._devices = list(jax.local_devices())
+        self._dead: set = set()          # dead device indices
+        self._chaos = self._wrap_chaos(chaos)
         # scorer semantics == the funnel's motion gate: survive iff any
         # intra-chunk transition scores strictly above motion_threshold
         self._score_threshold = float(np.nextafter(
             np.float32(base.motion_threshold), np.float32(np.inf)))
+
+    @staticmethod
+    def _wrap_chaos(chaos):
+        if chaos is None:
+            return None
+        from repro.camera.serve.chaos import ChaosEngine, ChaosSpec
+
+        if isinstance(chaos, ChaosEngine):
+            return chaos
+        if isinstance(chaos, ChaosSpec):
+            return ChaosEngine(chaos)
+        raise TypeError(
+            f"chaos= wants a ChaosSpec or ChaosEngine, got "
+            f"{type(chaos).__name__}")
 
     # -- registration / churn -------------------------------------------------
 
@@ -192,9 +338,14 @@ class StreamingServer:
         the requested cut does not fit, cheaper-byte cuts are tried before
         rejecting, so a stream may be granted a different placement than
         it asked for (congestion-aware placement at admission time).
+        Under chaos, a faulty stream's predicted bps is inflated by its
+        expected retransmission factor so retries are budgeted up front.
         """
-        if sid in self._streams:
-            raise ValueError(f"stream {sid!r} already registered")
+        st = self._streams.get(sid)
+        if st is not None:
+            if st.draining:
+                raise StreamDrainingError(sid, len(st.queue))
+            raise ServeError(f"stream {sid!r} already registered")
         cfg = self.cfg
         if cut is None:
             projected = sum(s.fps for s in self._streams.values()
@@ -211,8 +362,9 @@ class StreamingServer:
             return AdmissionDecision(True, sid, None, None, "admitted")
 
         if cut not in FA_CUTS:
-            raise ValueError(f"cut {cut!r} not in {FA_CUTS}")
+            raise ServeError(f"cut {cut!r} not in {FA_CUTS}")
         frac = cfg.admit_motion_frac if motion_frac is None else motion_frac
+        retx = self._chaos.retx_factor(sid) if self._chaos is not None else 1.0
         fleet_bps = sum(s.declared_bps for s in self._streams.values())
         p99 = (self.last_link_report.p99_latency_s
                if self.last_link_report is not None else 0.0)
@@ -227,7 +379,7 @@ class StreamingServer:
         candidates.sort(key=lambda c: (c != cut,
                                        self._predict_bps(c, bits, fps, frac)))
         for c in candidates:
-            bps = self._predict_bps(c, bits, fps, frac)
+            bps = self._predict_bps(c, bits, fps, frac) * retx
             util = (fleet_bps + bps) / self.link.bytes_per_s
             if util <= cfg.admit_util:
                 reason = ("admitted" if c == cut else
@@ -235,7 +387,7 @@ class StreamingServer:
                           f"{cfg.admit_util:.0%} uplink utilization")
                 self._admit(sid, fps, c, bits, t, bps)
                 return AdmissionDecision(True, sid, c, bits, reason, bps, util)
-        bps = self._predict_bps(candidates[-1], bits, fps, frac)
+        bps = self._predict_bps(candidates[-1], bits, fps, frac) * retx
         dec = AdmissionDecision(
             False, sid, cut, bits,
             f"uplink: even cheapest cut exceeds {cfg.admit_util:.0%} "
@@ -258,10 +410,13 @@ class StreamingServer:
         cfg = self.cfg
         st = _Stream(sid=sid, fps=fps, cut=cut,
                      bits=bits if cut is not None else None, t_join=t,
-                     queue=deque(), declared_bps=bps)
+                     queue=deque(), declared_bps=bps,
+                     order=self._order_counter)
+        self._order_counter += 1
         st.stats = deque(maxlen=cfg.stats_window)
         st.trace = deque([0.0] * min(self.tick_count, cfg.link_window),
                          maxlen=cfg.link_window)
+        st.ladder = self._build_ladder(sid, cut, bits)
         self._streams[sid] = st
 
     def unregister(self, sid: str) -> int:
@@ -270,22 +425,166 @@ class StreamingServer:
         Returns the number of frames left in the queue — the stream object
         disappears once they have all completed (immediately when empty).
         """
-        st = self._streams[sid]
+        st = self._streams.get(sid)
+        if st is None:
+            raise UnknownStreamError(sid, self._streams)
         st.draining = True
         n = len(st.queue)
         if n == 0:
             del self._streams[sid]
         return n
 
-    def enqueue(self, sid: str, frame, t: float):
-        st = self._streams[sid]
+    def enqueue(self, sid: str, frame, t: float) -> int:
+        """Queue one frame; returns its per-stream sequence number.
+
+        Validates the frame against the registered stream's geometry
+        *here*, where the caller can still tell which stream misbehaved —
+        not inside the next tick's fused dispatch.  When the bounded
+        queue overflows, the *oldest* queued frames are shed (the stalest
+        data is the least useful under overload) and surfaced in the next
+        :class:`TickReport`'s ``shed`` records.
+        """
+        st = self._streams.get(sid)
+        if st is None:
+            raise UnknownStreamError(sid, self._streams)
         if st.draining:
-            raise ValueError(f"stream {sid!r} is draining")
-        st.queue.append((float(t), np.asarray(frame, np.float32)))
+            raise StreamDrainingError(sid, len(st.queue))
+        try:
+            arr = np.asarray(frame, np.float32)
+        except (TypeError, ValueError) as e:
+            raise ServeError(
+                f"stream {sid!r}: frame is not float32-castable "
+                f"({e})") from e
+        if arr.shape != (self.h, self.w):
+            raise ServeError(
+                f"stream {sid!r}: frame shape {arr.shape} != registered "
+                f"({self.h}, {self.w})")
+        seq = st.seq_next
+        st.seq_next += 1
+        self.total_enqueued += 1
+        st.queue.append((float(t), arr, seq))
+        bound = self.cfg.max_queue_frames
+        if bound and len(st.queue) > bound:
+            a, _f, sq = st.queue.popleft()
+            st.pending_shed.append((a, sq))
+            st.shed_n += 1
+            self.total_shed += 1
+        return seq
 
     @property
     def streams(self):
         return dict(self._streams)
+
+    # -- chaos plane: devices + ladders ---------------------------------------
+
+    def _healthy(self) -> tuple:
+        return tuple(d for i, d in enumerate(self._devices)
+                     if i not in self._dead)
+
+    def kill_device(self, idx: int):
+        """Simulate losing local device ``idx`` — placement groups that
+        pmapped over it re-shard onto the survivors at the next dispatch
+        (single-device vmap when the survivors stop dividing)."""
+        if not 0 <= idx < len(self._devices):
+            raise ServeError(
+                f"device index {idx} out of range "
+                f"[0, {len(self._devices)})")
+        self._dead.add(int(idx))
+        if not self._healthy():
+            self._dead.discard(int(idx))
+            raise ServeError(
+                "cannot kill the last healthy device — the serving host "
+                "needs at least one")
+
+    def restore_device(self, idx: int):
+        """Bring device ``idx`` back; groups re-shard to the wider set.
+
+        Local closures stay cached per healthy-device set (``_group_step``
+        selects by the *current* set every tick, so a stale entry is never
+        dispatched), which makes flapping kill/restore cycles recompile
+        nothing.
+        """
+        self._dead.discard(int(idx))
+
+    def _ladder_kwargs(self):
+        cfg = self.cfg
+        if self._chaos is not None:
+            spec = self._chaos.spec
+            return dict(window=spec.ladder_window,
+                        max_retry_frac=spec.ladder_max_retry_frac,
+                        deadline_s=cfg.slo_s,
+                        recover_after=spec.ladder_recover_after)
+        return dict(deadline_s=cfg.slo_s)
+
+    def _make_ladder(self, rungs):
+        from repro.camera.offload.resilience import DegradationLadder
+
+        return DegradationLadder(rungs, **self._ladder_kwargs())
+
+    def _ladder_rungs(self, cut, bits):
+        """Rung list below one granted placement: narrower codecs, the
+        calibrated-cheapest cut (via the controller when it has
+        measurements), then all-on-node."""
+        widths = [bits] + [b for b in (8, 4) if bits is None or b < bits]
+        if self.controller is not None and \
+                getattr(self.controller, "measurements", None):
+            try:
+                return self.controller.degradation_rungs(
+                    cut, bits_ladder=tuple(widths))
+            except ValueError:
+                pass
+        return [(cut, b) for b in widths] + [_ON_NODE]
+
+    def _build_ladder(self, sid, cut, bits):
+        if self._chaos is None or cut is None:
+            return None
+        if not self._chaos.is_faulty(sid):
+            return None
+        return self._make_ladder(self._ladder_rungs(cut, bits))
+
+    def _injector(self, sid):
+        return None if self._chaos is None else self._chaos.injector_for(sid)
+
+    def _transmit(self, inj, wire_b, t):
+        """One chunk delivery through a stream's fault process.
+
+        Returns ``(delivered, bytes_on_air, attempts, lost, corrupt)``.
+        Every attempt re-ships payload + session sideband; exhausted
+        retries mean the cloud never saw the chunk (the caller re-queues
+        the frames — they are retried, not lost).
+        """
+        from repro.camera.offload.payloads import SESSION_SIDEBAND_BYTES
+
+        per = float(wire_b) + SESSION_SIDEBAND_BYTES
+        max_att = 1 + self._chaos.spec.max_retries
+        lost = corrupt = 0
+        on_air = 0.0
+        for att in range(1, max_att + 1):
+            on_air += per
+            outcome = inj.attempt(t)
+            if outcome == "ok":
+                return True, on_air, att, lost, corrupt
+            if outcome == "corrupt":
+                corrupt += 1
+            else:
+                lost += 1
+        return False, on_air, max_att, lost, corrupt
+
+    def _observe_ladder(self, st, moves, *, rung, delivered, attempts, lost,
+                        corrupt, payload_b, on_air, latency_s):
+        from repro.camera.offload.resilience import DeliveryRecord
+
+        cut, bits = rung
+        rec = DeliveryRecord(
+            seq=st.frames_done, cut=cut, bits=bits, delivered=delivered,
+            fallback=False, attempts=attempts, lost=lost, corrupt=corrupt,
+            payload_bytes=payload_b, bytes_on_air=on_air, compute_s=0.0,
+            latency_s=latency_s, energy_j=on_air * self.link.joules_per_byte,
+            brownouts=0, restores=0, recovery_s=0.0)
+        old = st.ladder.level
+        st.ladder.observe(rec)
+        if st.ladder.level != old:
+            moves.append((st.sid, old, st.ladder.level))
 
     # -- placement groups ------------------------------------------------------
 
@@ -300,7 +599,8 @@ class StreamingServer:
         cap = self.cfg.capacity
         return cap * max(1, -(-n // cap))
 
-    def prewarm(self, rungs, *, max_ready: int | None = None):
+    def prewarm(self, rungs, *, max_ready: int | None = None,
+                device_counts=()):
         """Compile every placement group ahead of the measured ticks.
 
         Runs one zeros dispatch through the full scorer->cascade->group
@@ -308,6 +608,12 @@ class StreamingServer:
         ready chunks, default one ``capacity``).  Zero chunks are
         motionless, so nothing is observed and no stats move — this only
         populates the jit caches.
+
+        ``device_counts`` additionally compiles the local group over
+        degraded device prefixes (e.g. ``(3, 1)`` on a 4-device host
+        whose chaos schedule kills the last device) so failover pays
+        compute, not XLA compile.  Kills that leave a non-prefix healthy
+        set still work but compile lazily at the first degraded tick.
         """
         import jax
         import jax.numpy as jnp
@@ -317,8 +623,19 @@ class StreamingServer:
         cfg = self.cfg
         top = self._bucket(max_ready or cfg.capacity)
         widths = range(cfg.capacity, top + 1, cfg.capacity)
+        healthy = self._healthy()
+        local_keys = [None if not self._dead
+                      else tuple(d.id for d in healthy)]
+        for n in device_counts:
+            n = max(1, min(int(n), len(healthy)))
+            local_keys.append(tuple(d.id for d in healthy[:n]))
+        steps = []
         for rung in rungs:
-            step = self._group_step(rung)
+            if rung == (None, None):
+                steps.extend(self._local_step_for(k) for k in local_keys)
+            else:
+                steps.append(self._group_step(rung))
+        for step in steps:
             for b in widths:
                 stack = jnp.zeros((b, cfg.chunk, self.h, self.w),
                                   jnp.float32)
@@ -327,57 +644,76 @@ class StreamingServer:
                                     capacity=cfg.capacity)
                 jax.block_until_ready(out)
 
-    def _group_step(self, rung):
-        """Cached single-dispatch micro-batch closure for one placement."""
-        step = self._group_steps.get(rung)
+    def _local_step_for(self, devices_key):
+        """Local placement-group step over one healthy-device set.
+
+        ``devices_key`` is None for "all local devices" (the pre-chaos
+        closure, bit-identical to PR 8) or a tuple of device ids — the
+        failover shape after kills.  Cached per key, so restoring a
+        previously-seen set re-dispatches without compiling.
+        """
+        key = ((None, None), devices_key)
+        step = self._group_steps.get(key)
         if step is not None:
             return step
-        import jax
         import jax.numpy as jnp
 
         cap, chunk = self.cfg.capacity, self.cfg.chunk
+        if devices_key is None:
+            inner = self.base.batch_step(cap, chunk)
+        else:
+            by_id = {d.id: d for d in self._devices}
+            inner = self.base.batch_step(
+                cap, chunk, devices=[by_id[i] for i in devices_key])
+        ones = jnp.ones((cap,), bool)
+
+        def step(chunks):
+            out = dict(inner(chunks, ones))
+            out["wire_b"] = jnp.zeros((cap,), jnp.float32)
+            return out
+
+        self._group_steps[key] = step
+        return step
+
+    def _group_step(self, rung):
+        """Cached single-dispatch micro-batch closure for one placement."""
         cut, bits = rung
         if cut is None:
-            inner = self.base.batch_step(cap, chunk)
-            ones = jnp.ones((cap,), bool)
+            healthy_key = (None if not self._dead
+                           else tuple(d.id for d in self._healthy()))
+            return self._local_step_for(healthy_key)
+        key = (rung, None)
+        step = self._group_steps.get(key)
+        if step is not None:
+            return step
+        import jax
 
-            def step(chunks):
-                out = dict(inner(chunks, ones))
-                out["wire_b"] = jnp.zeros((cap,), jnp.float32)
-                return out
-        else:
-            from repro.camera.offload.executors import FaceAuthOffloadExecutor
+        chunk = self.cfg.chunk
 
-            off = self._offload_execs.get(rung)
-            if off is None:
-                off = FaceAuthOffloadExecutor(self.base, cut, bits=bits,
-                                              use_pallas=False)
-                self._offload_execs[rung] = off
-            consts = tuple(off._consts)
-            shape = (chunk, self.h, self.w)
+        from repro.camera.offload.executors import FaceAuthOffloadExecutor
 
-            def one(frames):
-                arrays, wire_b = off._node_fn(frames, *consts)
-                res = off._cloud_fn(arrays, *consts, frames_shape=shape)
-                out = dict(res)
-                out["wire_b"] = wire_b
-                return out
+        off = self._offload_execs.get(rung)
+        if off is None:
+            off = FaceAuthOffloadExecutor(self.base, cut, bits=bits,
+                                          use_pallas=False)
+            self._offload_execs[rung] = off
+        consts = tuple(off._consts)
+        shape = (chunk, self.h, self.w)
 
-            step = jax.jit(jax.vmap(one))
-        self._group_steps[rung] = step
+        def one(frames):
+            arrays, wire_b = off._node_fn(frames, *consts)
+            res = off._cloud_fn(arrays, *consts, frames_shape=shape)
+            out = dict(res)
+            out["wire_b"] = wire_b
+            return out
+
+        step = jax.jit(jax.vmap(one))
+        self._group_steps[key] = step
         return step
 
     def _scores(self, chunks):
         """Chunk motion energy — the cascade's cheap scorer."""
-        import jax.numpy as jnp
-
-        from repro.camera.motion import motion_score
-
-        if chunks.shape[1] < 2:
-            return jnp.full((chunks.shape[0],), -np.inf, jnp.float32)
-        sc = motion_score(chunks[:, :-1], chunks[:, 1:],
-                          self.base.motion_factor)
-        return jnp.max(sc, axis=-1)
+        return chunk_motion_scores(chunks, self.base.motion_factor)
 
     def _quiet_result(self, n):
         res = self._quiet_cache.get(n)
@@ -400,9 +736,22 @@ class StreamingServer:
     # -- the tick --------------------------------------------------------------
 
     def _gather_ready(self, t):
+        """Take at most one eligible chunk per stream, in DRR order.
+
+        Deficit-round-robin slot grants: streams are visited by
+        ``(-deficit, registration order)``; every visited-and-eligible
+        stream accrues one chunk-quantum.  The ready order IS the
+        dispatch stack order, so ``cascade_serve``'s deterministic
+        keep-lowest-indices capacity drop serves the highest-deficit
+        streams first — capacity-dropped streams keep their credit and
+        outrank this tick's winners next tick.  With no contention every
+        deficit stays zero and the order degenerates to registration
+        order — the pre-chaos scheduler, bit for bit.
+        """
         cfg = self.cfg
         ready = []
-        for st in self._streams.values():
+        for st in sorted(self._streams.values(),
+                         key=lambda s: (-s.deficit, s.order)):
             q = st.queue
             if not q:
                 continue
@@ -410,15 +759,34 @@ class StreamingServer:
             stale = (t - q[0][0]) >= cfg.max_queue_s
             if not (full or stale or st.draining):
                 continue
+            st.deficit += float(cfg.chunk)
             n_real = min(cfg.chunk, len(q))
             taken = [q.popleft() for _ in range(n_real)]
-            frames = [f for _, f in taken]
+            frames = [f for _, f, _ in taken]
             while len(frames) < cfg.chunk:      # pad: repeated last frame is
                 frames.append(frames[-1])       # motionless, hence quiet
             ready.append(_ReadyChunk(
                 sid=st.sid, frames=np.stack(frames),
-                arrivals=tuple(a for a, _ in taken), n_real=n_real))
+                arrivals=tuple(a for a, _, _ in taken),
+                seqs=tuple(s for _, _, s in taken), n_real=n_real))
         return ready
+
+    def _collect_shed(self):
+        shed = []
+        for st in self._streams.values():
+            if st.pending_shed:
+                shed.append(ShedRecord(
+                    sid=st.sid,
+                    seqs=tuple(sq for _, sq in st.pending_shed),
+                    arrivals=tuple(a for a, _ in st.pending_shed)))
+                st.pending_shed = []
+        return tuple(shed)
+
+    def _requeue(self, st, rc):
+        for a, f, sq in zip(reversed(rc.arrivals),
+                            reversed(rc.frames[:rc.n_real]),
+                            reversed(rc.seqs)):
+            st.queue.appendleft((a, f, sq))
 
     def tick(self, t: float) -> TickReport:
         """One scheduler period at simulated time ``t``."""
@@ -428,14 +796,25 @@ class StreamingServer:
 
         cfg = self.cfg
         t0 = time.perf_counter()
+        events = []
+        if self._chaos is not None:
+            for kind, idx in self._chaos.events_at(self.tick_count):
+                (self.kill_device if kind == "kill"
+                 else self.restore_device)(idx)
+                events.append((kind, idx))
+        shed = self._collect_shed()
         ready = self._gather_ready(t)
+        gathered = [self._streams[rc.sid] for rc in ready]
         groups: dict = {}
         for rc in ready:
             groups.setdefault(self._streams[rc.sid].rung, []).append(rc)
 
-        completions, changes = [], []
+        p99_link = (self.last_link_report.p99_latency_s
+                    if self.last_link_report is not None
+                    else self.link.latency_s)
+        completions, changes, moves = [], [], []
         tick_bytes = {sid: 0.0 for sid in self._streams}
-        n_served = n_quiet = n_requeued = 0
+        n_served = n_quiet = n_requeued = n_failed_tx = 0
         dispatched = False
         for rung, rcs in groups.items():
             dispatched = True
@@ -461,9 +840,7 @@ class StreamingServer:
                 if i in dropped:                 # re-queue, oldest first
                     n_requeued += 1
                     st.requeues += 1
-                    for a, f in zip(reversed(rc.arrivals),
-                                    reversed(rc.frames[:rc.n_real])):
-                        st.queue.appendleft((a, f))
+                    self._requeue(st, rc)
                     continue
                 if served[i]:
                     n_served += 1
@@ -474,9 +851,6 @@ class StreamingServer:
                     kind = "served"
                     motion_n = int(result["motion"].sum())
                     windows_n = int(result["window_valid"].sum())
-                    if cut and self.controller is not None:
-                        self.controller.observe(cut, units=rc.n_real,
-                                                wire_bytes=wire)
                 else:                            # scorer-filtered: quiet
                     n_quiet += 1
                     q = self._quiet_result(cfg.chunk)
@@ -487,14 +861,69 @@ class StreamingServer:
                             if cut else 0.0)
                     kind = "quiet"
                     motion_n = windows_n = 0
-                tick_bytes[rc.sid] = tick_bytes.get(rc.sid, 0.0) + wire
+                inj = self._injector(rc.sid)
+                payload_b = wire
+                if cut is not None and inj is not None:
+                    # chaos plane: the chunk transits the stream's fault
+                    # process; every attempt congests the shared uplink
+                    ok, on_air, att, lost, corrupt = \
+                        self._transmit(inj, wire, t)
+                    lat = (t - rc.arrivals[0]) + p99_link
+                    if st.ladder is not None:
+                        self._observe_ladder(
+                            st, moves, rung=rung, delivered=ok,
+                            attempts=att, lost=lost, corrupt=corrupt,
+                            payload_b=payload_b, on_air=on_air,
+                            latency_s=lat)
+                    tick_bytes[rc.sid] = tick_bytes.get(rc.sid, 0.0) + on_air
+                    if not ok:
+                        # the cloud never received the payload — retried
+                        # next tick (possibly at a degraded rung), not lost
+                        n_failed_tx += 1
+                        st.tx_failures += 1
+                        self._requeue(st, rc)
+                        continue
+                    wire = on_air
+                elif cut is not None:
+                    tick_bytes[rc.sid] = tick_bytes.get(rc.sid, 0.0) + wire
+                elif (inj is not None and st.ladder is not None
+                        and st.ladder.level > 0):
+                    # ON_NODE rung: the decision beacon probes the channel
+                    # so hysteresis recovery has a signal
+                    beacon = fa_decision_bytes(rc.n_real)
+                    ok_b, on_air, att, lost, corrupt = \
+                        self._transmit(inj, beacon, t)
+                    self._observe_ladder(
+                        st, moves, rung=_ON_NODE, delivered=ok_b,
+                        attempts=att, lost=lost, corrupt=corrupt,
+                        payload_b=beacon, on_air=on_air, latency_s=0.0)
+                    tick_bytes[rc.sid] = tick_bytes.get(rc.sid, 0.0) + on_air
+                if (cut is not None and kind == "served"
+                        and self.controller is not None):
+                    # the byte model learns from the payload, never from
+                    # retransmissions — faults must not skew predictions
+                    self.controller.observe(cut, units=rc.n_real,
+                                            wire_bytes=payload_b)
                 st.stats.append((rc.n_real, motion_n, windows_n))
                 st.frames_done += rc.n_real
+                st.delivered_n += rc.n_real
+                st.last_served_seq = max(st.last_served_seq, rc.seqs[-1])
+                self.total_delivered += rc.n_real
+                st.deficit = max(0.0, st.deficit - float(cfg.chunk))
                 if st.cut is not None:
                     st.frames_since_resolve += rc.n_real
                 completions.append(Completion(
                     sid=rc.sid, t=t, n_frames=rc.n_real, kind=kind,
-                    result=result, wire_bytes=wire))
+                    result=result, wire_bytes=wire, seqs=rc.seqs))
+
+        # DRR normalization: shift gathered deficits down by their min so
+        # credits stay bounded (relative order — the only thing the grant
+        # sort reads — is unchanged)
+        if gathered:
+            m = min(st.deficit for st in gathered)
+            if m > 0.0:
+                for st in gathered:
+                    st.deficit -= m
 
         batch_s = time.perf_counter() - t0
         if dispatched:
@@ -528,7 +957,9 @@ class StreamingServer:
             n_requeued=n_requeued, batch_s=batch_s,
             bytes_sent=float(sum(tick_bytes.values())),
             completions=tuple(completions), resolves_fired=resolves,
-            cut_changes=tuple(changes))
+            cut_changes=tuple(changes), shed=shed,
+            n_failed_tx=n_failed_tx, ladder_moves=tuple(moves),
+            device_events=tuple(events))
 
     def _refresh_link_report(self):
         from repro.camera.offload.link import simulate_shared_link
@@ -546,7 +977,13 @@ class StreamingServer:
             mat, self.link, frame_period_s=cfg.tick_s)
 
     def _maybe_resolve(self, changes):
-        """Windowed per-stream cut re-solves under the congestion deadline."""
+        """Windowed per-stream cut re-solves under the congestion deadline.
+
+        Ladder-degraded streams are skipped — during an incident the
+        ladder has the wheel; once it recovers to rung 0 the solver
+        resumes, and a re-solve that changes the cut rebuilds the
+        stream's rung list around the new placement.
+        """
         cfg = self.cfg
         if self.controller is None:
             return 0
@@ -555,6 +992,8 @@ class StreamingServer:
                if self.last_link_report is not None else self.link.latency_s)
         for st in self._streams.values():
             if st.cut is None or st.frames_since_resolve < cfg.resolve_every:
+                continue
+            if st.ladder is not None and st.ladder.level > 0:
                 continue
             m, v = st.window_stats()
             chunk_b = {c: fa_cut_bytes(c, st.bits, frames=cfg.chunk,
@@ -576,6 +1015,11 @@ class StreamingServer:
                                        sol.cut_after))
                 changes.append((st.sid, st.cut, sol.cut_after))
                 st.cut = sol.cut_after
+                if st.ladder is not None:
+                    old = st.ladder
+                    st.ladder = self._make_ladder(
+                        self._ladder_rungs(st.cut, st.bits))
+                    st.ladder.transitions = old.transitions
         return fired
 
     def _reap_drained(self):
@@ -583,6 +1027,198 @@ class StreamingServer:
                 if st.draining and not st.queue]
         for sid in done:
             del self._streams[sid]
+
+    # -- checkpoint / restore (DESIGN.md §14) ----------------------------------
+
+    def checkpoint(self, ckpt_dir: str, step: int | None = None) -> str:
+        """Persist the full server state at a tick boundary.
+
+        Queue contents go to the array tree (one leaf triple per stream:
+        arrival times, frames, sequence numbers); every scalar — stream
+        descriptors, ladder levels, DRR credits, seq counters, controller
+        windows — rides the JSON ``extra``.  Call between ticks only: a
+        mid-tick snapshot would double-serve in-flight chunks on restore.
+        Wall-clock metric lists (``batch_lat_s``/``queue_delay_s``) are
+        host measurements, not server state, and reset on restore.
+        """
+        from repro.ckpt.checkpoint import save_checkpoint
+
+        tree = {"queues": {}}
+        meta = {}
+        for sid, st in self._streams.items():
+            q = list(st.queue)
+            tree["queues"][sid] = {
+                "t": np.asarray([a for a, _, _ in q], np.float64),
+                "f": (np.stack([f for _, f, _ in q])
+                      if q else np.zeros((0, self.h, self.w), np.float32)),
+                "seq": np.asarray([s for _, _, s in q], np.int64),
+            }
+            lad = None
+            if st.ladder is not None:
+                lad = {"level": st.ladder.level,
+                       "clean": st.ladder._clean,
+                       "rungs": [list(r) for r in st.ladder.rungs],
+                       "transitions": [list(x)
+                                       for x in st.ladder.transitions]}
+            meta[sid] = {
+                "fps": st.fps, "cut": st.cut, "bits": st.bits,
+                "t_join": st.t_join, "draining": st.draining,
+                "frames_done": st.frames_done,
+                "frames_since_resolve": st.frames_since_resolve,
+                "resolves": st.resolves, "requeues": st.requeues,
+                "declared_bps": st.declared_bps, "seq_next": st.seq_next,
+                "delivered_n": st.delivered_n,
+                "last_served_seq": st.last_served_seq,
+                "shed_n": st.shed_n, "tx_failures": st.tx_failures,
+                "deficit": st.deficit, "order": st.order,
+                "qlen": len(q),
+                "pending_shed": [list(x) for x in st.pending_shed],
+                "stats": [list(x) for x in st.stats],
+                "trace": list(st.trace),
+                "transitions": [list(x) for x in st.transitions],
+                "ladder": lad,
+            }
+        ctl = None
+        if self.controller is not None:
+            ctl = {"resolves": self.controller.resolves,
+                   "window_obs": {c: [list(row) for row in dq]
+                                  for c, dq in
+                                  self.controller._window_obs.items()}}
+        extra = {
+            "version": 1,
+            "tick_count": self.tick_count,
+            "frames_completed": self.frames_completed,
+            "total_enqueued": self.total_enqueued,
+            "total_delivered": self.total_delivered,
+            "total_shed": self.total_shed,
+            "order_counter": self._order_counter,
+            "dead_devices": sorted(self._dead),
+            "streams": meta,
+            "controller": ctl,
+        }
+        if step is None:
+            step = self.tick_count
+        return save_checkpoint(ckpt_dir, step, tree, extra=extra)
+
+    @classmethod
+    def restore(cls, ckpt_dir: str, base, *, link=None, controller=None,
+                config: ServeConfig = ServeConfig(), chaos=None,
+                step: int | None = None) -> "StreamingServer":
+        """Rebuild a server from its newest (or ``step``'s) checkpoint.
+
+        Resumes exactly where :meth:`checkpoint` left off: queued frames,
+        seq counters, ladder levels, DRR credits, draining flags, dead
+        devices, and the controller's sliding windows (written into the
+        ``controller`` instance passed here).  Fault-injector RNG state is
+        NOT part of server state — a restored fleet faults afresh from
+        its seeds, which models an independent post-restart channel.
+        """
+        from repro.ckpt.checkpoint import (latest_step, read_extra,
+                                           restore_checkpoint)
+
+        if step is None:
+            step = latest_step(ckpt_dir)
+            if step is None:
+                raise ServeError(
+                    f"no complete checkpoint under {ckpt_dir!r}")
+        extra = read_extra(ckpt_dir, step)
+        if extra.get("version") != 1:
+            raise ServeError(
+                f"unsupported server checkpoint version "
+                f"{extra.get('version')!r}")
+        srv = cls(base, link=link, controller=controller, config=config,
+                  chaos=chaos)
+        like = {"queues": {
+            sid: {"t": np.zeros(m["qlen"], np.float64),
+                  "f": np.zeros((m["qlen"], srv.h, srv.w), np.float32),
+                  "seq": np.zeros(m["qlen"], np.int64)}
+            for sid, m in extra["streams"].items()}}
+        tree, _ = restore_checkpoint(ckpt_dir, step, like)
+
+        srv.tick_count = int(extra["tick_count"])
+        srv.frames_completed = int(extra["frames_completed"])
+        srv.total_enqueued = int(extra["total_enqueued"])
+        srv.total_delivered = int(extra["total_delivered"])
+        srv.total_shed = int(extra["total_shed"])
+        srv._order_counter = int(extra["order_counter"])
+        srv._dead = {int(i) for i in extra["dead_devices"]
+                     if i < len(srv._devices)}
+        for sid, m in extra["streams"].items():
+            q = tree["queues"][sid]
+            ts = np.asarray(q["t"])
+            fs = np.asarray(q["f"])
+            sq = np.asarray(q["seq"])
+            st = _Stream(
+                sid=sid, fps=float(m["fps"]), cut=m["cut"],
+                bits=m["bits"], t_join=float(m["t_join"]),
+                queue=deque((float(ts[i]), np.asarray(fs[i], np.float32),
+                             int(sq[i])) for i in range(len(ts))),
+                draining=bool(m["draining"]),
+                frames_done=int(m["frames_done"]),
+                frames_since_resolve=int(m["frames_since_resolve"]),
+                resolves=int(m["resolves"]), requeues=int(m["requeues"]),
+                declared_bps=float(m["declared_bps"]),
+                seq_next=int(m["seq_next"]),
+                delivered_n=int(m["delivered_n"]),
+                last_served_seq=int(m["last_served_seq"]),
+                shed_n=int(m["shed_n"]), tx_failures=int(m["tx_failures"]),
+                deficit=float(m["deficit"]), order=int(m["order"]))
+            st.pending_shed = [tuple(x) for x in m["pending_shed"]]
+            st.stats = deque((tuple(x) for x in m["stats"]),
+                             maxlen=config.stats_window)
+            st.trace = deque(m["trace"], maxlen=config.link_window)
+            st.transitions = [tuple(x) for x in m["transitions"]]
+            lad = m.get("ladder")
+            if lad is not None:
+                ladder = srv._make_ladder([tuple(r) for r in lad["rungs"]])
+                ladder.level = int(lad["level"])
+                ladder._clean = int(lad["clean"])
+                ladder.transitions = [tuple(x) for x in lad["transitions"]]
+                st.ladder = ladder
+            srv._streams[sid] = st
+        if controller is not None and extra.get("controller"):
+            import collections as _c
+
+            ctl = extra["controller"]
+            controller.resolves = int(ctl["resolves"])
+            controller._window_obs = {
+                c: _c.deque((tuple(row) for row in rows),
+                            maxlen=controller.window)
+                for c, rows in ctl["window_obs"].items()}
+        return srv
+
+    def seq_audit(self) -> dict:
+        """Prove the exactly-once frame accounting (DESIGN.md §14).
+
+        Per live stream: assigned seqs partition into delivered + shed +
+        queued; queued seqs are strictly ascending and strictly above the
+        highest delivered seq (so nothing can be served twice).  Fleet
+        totals use churn-surviving counters, so the identity holds across
+        unregister/reap and across checkpoint/restore.
+        """
+        per = {}
+        ok = True
+        queued_total = 0
+        for sid, st in self._streams.items():
+            seqs = [e[2] for e in st.queue]
+            queued_total += len(seqs)
+            ascending = all(a < b for a, b in zip(seqs, seqs[1:]))
+            unserved = all(s > st.last_served_seq for s in seqs)
+            balanced = st.seq_next == (st.delivered_n + st.shed_n
+                                       + len(seqs))
+            per[sid] = {"ok": ascending and unserved and balanced,
+                        "assigned": st.seq_next,
+                        "delivered": st.delivered_n, "shed": st.shed_n,
+                        "queued": len(seqs),
+                        "last_served_seq": st.last_served_seq}
+            ok = ok and per[sid]["ok"]
+        fleet = (self.total_enqueued
+                 == self.total_delivered + self.total_shed + queued_total)
+        return {"ok": bool(ok and fleet), "fleet_balanced": bool(fleet),
+                "enqueued": self.total_enqueued,
+                "delivered": self.total_delivered,
+                "shed": self.total_shed, "queued": queued_total,
+                "streams": per}
 
     # -- fleet metrics ---------------------------------------------------------
 

@@ -78,6 +78,19 @@ def latest_step(ckpt_dir: str) -> int | None:
     return max(steps) if steps else None
 
 
+def read_extra(ckpt_dir: str, step: int) -> dict:
+    """The manifest's ``extra`` dict alone, no leaves materialized.
+
+    Restorers whose tree *structure* depends on saved metadata (e.g. the
+    serving runtime's per-stream queue lengths, DESIGN.md §14) read this
+    first, build the ``like_tree`` from it, then call
+    :func:`restore_checkpoint`.
+    """
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        return json.load(f)["extra"]
+
+
 def restore_checkpoint(ckpt_dir: str, step: int, like_tree, shardings=None):
     """Restore into the structure of ``like_tree``.
 

@@ -475,5 +475,7 @@ class TestRepoGate:
         assert len(subs["kernel"]) == 7
         dispatch_subjects = " ".join(subs["dispatch"])
         for must in ("face_auth.funnel", "vr_rig.depth", "vr_rig.panorama",
-                     "fa_offload", "vr_offload"):
+                     "fa_offload", "vr_offload",
+                     "serve.group_step_degraded[vj,4]",
+                     "serve.restore_rescore"):
             assert must in dispatch_subjects

@@ -15,7 +15,8 @@ import tempfile
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SECTIONS = ("fa", "vr", "vj", "nn", "bssa", "detect", "fa_hotpath",
-            "offload", "resilience", "serving", "analysis", "roofline")
+            "offload", "resilience", "serving", "serving_chaos",
+            "analysis", "roofline")
 
 
 def test_benchmark_smoke_all_sections():
@@ -24,7 +25,7 @@ def test_benchmark_smoke_all_sections():
     with tempfile.TemporaryDirectory() as td:
         out = subprocess.run(
             [sys.executable, "-m", "benchmarks.run", "--smoke", "--json", td],
-            capture_output=True, text=True, env=env, cwd=REPO, timeout=560)
+            capture_output=True, text=True, env=env, cwd=REPO, timeout=900)
         assert out.returncode == 0, (
             f"benchmark smoke failed:\n{out.stdout[-4000:]}\n"
             f"{out.stderr[-4000:]}")
@@ -62,6 +63,20 @@ def test_benchmark_smoke_all_sections():
         assert int(srow["resolves_fired"][0]) >= 1
         assert srow["serve_bitexact_local"][0] == "1"
         assert srow["serve_bitexact_vj_raw"][0] == "1"
+        cha = json.load(open(os.path.join(td, "BENCH_serving_chaos.json")))
+        crow = {r[1]: (r[2], r[3]) for r in cha["rows"]}
+        # §14 chaos plane: an inert spec is the PR 8 serving path bit for
+        # bit; every fault cell keeps exactly-once frame accounting; the
+        # server survives its own brownout via checkpoint/restore; and
+        # recovery lands the fleet back under the SLO without starvation
+        assert crow["zero_fault_bitexact"][0] == "1"
+        assert crow["worst_cell_exactly_once"][0] == "1"
+        assert crow["server_brownout_restore"][0] == "1"
+        post, cnote = crow["post_recovery_p99_s"]
+        assert float(post) <= float(cnote.split("SLO=")[1].split("s")[0])
+        gap, gnote = crow["starvation_gap"]
+        assert int(gap) <= int(gnote.split("ladder_depth=")[1].split(" ")[0])
+        assert int(crow["overload_shed_frames"][0]) > 0
         ana = json.load(open(os.path.join(td, "BENCH_analysis.json")))
         arow = {r[1]: r[2] for r in ana["rows"]}
         assert arow["non_baselined"] == "0"

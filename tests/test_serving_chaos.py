@@ -1,0 +1,550 @@
+"""Chaos-hardened serving fleet (DESIGN.md §14).
+
+Covers the named serving error family, bounded-queue fair shedding with
+the DRR starvation bound, per-stream fault injection with
+requeue-not-lose delivery, the serve-driven degradation ladder (descent
+and hysteresis recovery), device-kill failover bit-identity (subprocess
+with fake devices), server checkpoint/restore with exactly-once frame
+accounting, and the zero-fault pin: an inert chaos plane changes nothing.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.camera.offload.link import ETH_25G_LINK, GilbertElliott
+from repro.camera.serve import (ChaosEngine, ChaosSpec, ServeConfig,
+                                ServeError, StreamDrainingError,
+                                StreamingServer, UnknownStreamError)
+
+ALWAYS_LOST = GilbertElliott(p_gb=1.0, p_bg=0.0, loss_bad=1.0,
+                             loss_good=1.0)
+SOMETIMES_LOST = GilbertElliott(p_gb=0.3, p_bg=0.3, loss_bad=0.9,
+                                loss_good=0.0)
+
+
+@pytest.fixture(scope="module")
+def fa_setup():
+    from benchmarks.workloads import fa_cascade, fa_scan
+    from repro.camera.face_nn import train_face_nn
+    from repro.camera.pipelines import FaceAuthExecutor
+    from repro.camera.synthetic import face_dataset, security_video
+
+    frames, _truth = security_video(n_frames=10, motion_frames=5, seed=1)
+    casc = fa_cascade(smoke=True)
+    X, y, _ = face_dataset(n_per_class=80, seed=3)
+    nn = train_face_nn(X, y, steps=60)
+    sf, st, ad = fa_scan(True)
+    ex = FaceAuthExecutor(casc, nn, frames.shape[1], frames.shape[2],
+                          scale_factor=sf, step=st, adaptive=ad)
+    ex.calibrate(frames)
+    return ex, frames, ex(jnp.asarray(frames))
+
+
+def _motion_pair(frames, base):
+    motion = np.asarray(base.motion)
+    i = int(np.argmax(motion[1:])) + 1
+    assert motion[i]
+    return np.stack([frames[i - 1], frames[i]])
+
+
+def _server(ex, *, chunk=2, capacity=2, chaos=None, link=None, **kw):
+    kw.setdefault("max_queue_s", 100.0)
+    cfg = ServeConfig(chunk=chunk, capacity=capacity, tick_s=1.0, **kw)
+    return StreamingServer(ex, link=link, config=cfg, chaos=chaos)
+
+
+class _ScriptedInjector:
+    """Stands in for a FaultInjector: scripted attempt outcomes."""
+
+    def __init__(self, outcomes):
+        self.outcomes = list(outcomes)
+        self.brownout = None
+
+    def attempt(self, t):
+        return self.outcomes.pop(0) if self.outcomes else "ok"
+
+
+# ---------------------------------------------------------------------------
+# named error family (satellites 1 + 2)
+# ---------------------------------------------------------------------------
+
+
+class TestServeErrors:
+    def test_unknown_sid_lists_known_streams(self, fa_setup):
+        ex, frames, base = fa_setup
+        srv = _server(ex)
+        srv.register("cam-a", fps=1.0)
+        srv.register("cam-b", fps=1.0)
+        with pytest.raises(UnknownStreamError, match="cam-a"):
+            srv.enqueue("ghost", frames[0], t=0.0)
+        with pytest.raises(UnknownStreamError, match="'ghost'"):
+            srv.unregister("ghost")
+        # the named family subclasses ValueError: pre-§14 callers keep
+        # catching what they caught
+        with pytest.raises(ValueError):
+            srv.enqueue("ghost", frames[0], t=0.0)
+
+    def test_enqueue_validates_shape_and_dtype(self, fa_setup):
+        ex, frames, base = fa_setup
+        srv = _server(ex)
+        srv.register("a", fps=1.0)
+        with pytest.raises(ServeError, match="shape"):
+            srv.enqueue("a", frames[0][:-1], t=0.0)
+        with pytest.raises(ServeError, match="castable"):
+            srv.enqueue("a", np.array([["x"] * ex.det.grid.w]
+                                      * ex.det.grid.h), t=0.0)
+        # a valid frame still enqueues (validation is not over-strict)
+        assert srv.enqueue("a", frames[0].astype(np.float64), t=0.0) == 0
+
+    def test_reregister_while_draining_is_named_error(self, fa_setup):
+        ex, frames, base = fa_setup
+        srv = _server(ex)
+        srv.register("a", fps=1.0)
+        srv.enqueue("a", frames[0], t=0.0)
+        assert srv.unregister("a") == 1
+        with pytest.raises(StreamDrainingError, match="draining"):
+            srv.register("a", fps=1.0)
+        with pytest.raises(StreamDrainingError):
+            srv.enqueue("a", frames[1], t=0.5)
+        srv.tick(1.0)                       # drain completes, sid reaped
+        assert "a" not in srv.streams
+        srv.register("a", fps=1.0)          # now re-registration is clean
+        assert "a" in srv.streams
+
+    def test_enqueue_after_drain_completes_is_unknown_stream(self, fa_setup):
+        # regression: the reaped sid used to surface as a bare KeyError
+        ex, frames, base = fa_setup
+        srv = _server(ex)
+        srv.register("a", fps=1.0)
+        srv.enqueue("a", frames[0], t=0.0)
+        srv.unregister("a")
+        srv.tick(1.0)
+        with pytest.raises(UnknownStreamError, match="'a'"):
+            srv.enqueue("a", frames[1], t=2.0)
+
+    def test_double_register_still_valueerror(self, fa_setup):
+        ex, frames, base = fa_setup
+        srv = _server(ex)
+        srv.register("a", fps=1.0)
+        with pytest.raises(ServeError, match="already registered"):
+            srv.register("a", fps=1.0)
+
+    def test_kill_guard_rails(self, fa_setup):
+        ex, frames, base = fa_setup
+        srv = _server(ex)
+        with pytest.raises(ServeError, match="out of range"):
+            srv.kill_device(99)
+        with pytest.raises(ServeError, match="last healthy"):
+            for i in range(len(srv._devices)):
+                srv.kill_device(i)
+
+
+# ---------------------------------------------------------------------------
+# bounded queues + DRR fair shedding (tentpole b, satellite 3)
+# ---------------------------------------------------------------------------
+
+
+class TestFairShedding:
+    def test_bounded_queue_sheds_oldest_and_surfaces(self, fa_setup):
+        ex, frames, base = fa_setup
+        srv = _server(ex, max_queue_frames=4)
+        srv.register("a", fps=1.0)
+        for i in range(7):
+            srv.enqueue("a", frames[i % len(frames)], t=i * 0.1)
+        rep = srv.tick(1.0)
+        (shed,) = rep.shed
+        assert shed.sid == "a"
+        assert shed.seqs == (0, 1, 2)       # oldest first, never silent
+        assert shed.arrivals == (0.0, pytest.approx(0.1),
+                                 pytest.approx(0.2))
+        audit = srv.seq_audit()
+        assert audit["ok"] and audit["shed"] == 3
+        assert audit["enqueued"] == 7
+        # shed is reported exactly once
+        assert srv.tick(2.0).shed == ()
+
+    def test_shed_order_deterministic_across_runs(self, fa_setup):
+        ex, frames, base = fa_setup
+
+        def run():
+            srv = _server(ex, max_queue_frames=2)
+            out = []
+            for sid in ("a", "b"):
+                srv.register(sid, fps=1.0)
+            for k in range(6):
+                for sid in ("a", "b"):
+                    srv.enqueue(sid, frames[k % len(frames)], t=float(k))
+            rep = srv.tick(1.0)
+            out.extend((s.sid, s.seqs) for s in rep.shed)
+            return out, srv.seq_audit()
+
+        (o1, a1), (o2, a2) = run(), run()
+        assert o1 == o2
+        assert o1 == [("a", (0, 1, 2, 3)), ("b", (0, 1, 2, 3))]
+        assert a1 == a2 and a1["ok"]
+
+    def test_drr_starvation_bound_under_sustained_overload(self, fa_setup):
+        # 6 continuously-backlogged hot streams on one rung, capacity 2:
+        # the documented bound says every stream is served at least once
+        # every ceil(6/2) = 3 ticks — DRR makes it a perfect rotation
+        ex, frames, base = fa_setup
+        pair = _motion_pair(frames, base)
+        sids = [f"s{k}" for k in range(6)]
+        srv = _server(ex, chunk=2, capacity=2)
+        for sid in sids:
+            # declare low fps: admission is not the subject here — the
+            # *actual* offered load below is ~3x the service capacity
+            dec = srv.register(sid, fps=0.5)
+            assert dec.admitted, dec
+        served_at = {sid: [] for sid in sids}
+        for tick in range(9):
+            for sid in sids:
+                if len(srv.streams[sid].queue) < 2:
+                    srv.enqueue(sid, pair[0], t=float(tick))
+                    srv.enqueue(sid, pair[1], t=float(tick) + 0.5)
+            rep = srv.tick(float(tick + 1))
+            assert rep.n_served == 2 and rep.n_requeued == 4
+            for c in rep.completions:
+                served_at[c.sid].append(tick)
+        for sid in sids:
+            ticks = served_at[sid]
+            assert ticks, f"{sid} starved entirely"
+            # first service within the bound, then every ceil(R/C) ticks
+            assert ticks[0] <= 2, (sid, ticks)
+            assert all(b - a == 3 for a, b in zip(ticks, ticks[1:])), \
+                (sid, ticks)
+        assert srv.seq_audit()["ok"]
+
+    def test_uncontended_fleet_keeps_zero_deficits(self, fa_setup):
+        # no contention -> DRR degenerates to registration order and
+        # normalization keeps every credit at zero (the PR 8 scheduler)
+        ex, frames, base = fa_setup
+        pair = _motion_pair(frames, base)
+        srv = _server(ex, chunk=2, capacity=4)
+        for sid in ("a", "b", "c"):
+            srv.register(sid, fps=1.0)
+        for tick in range(3):
+            for sid in ("a", "b", "c"):
+                srv.enqueue(sid, pair[0], t=float(tick))
+                srv.enqueue(sid, pair[1], t=float(tick))
+            rep = srv.tick(float(tick + 1))
+            assert [c.sid for c in rep.completions] == ["a", "b", "c"]
+        assert all(st.deficit == 0.0 for st in srv.streams.values())
+
+
+# ---------------------------------------------------------------------------
+# zero-fault pin: an inert chaos plane changes nothing
+# ---------------------------------------------------------------------------
+
+
+class TestZeroFaultIdentity:
+    def test_inert_spec_is_bit_identical_to_no_chaos(self, fa_setup):
+        ex, frames, base = fa_setup
+
+        def run(chaos):
+            srv = _server(ex, chunk=2, capacity=2, chaos=chaos,
+                          link=ETH_25G_LINK)
+            dec = srv.register("a", fps=1.0, cut="vj", bits=8)
+            assert dec.admitted and dec.cut == "vj", dec
+            srv.register("b", fps=1.0)
+            reports = []
+            for tick in range(4):
+                for sid in ("a", "b"):
+                    srv.enqueue(sid, frames[(2 * tick) % 8], t=float(tick))
+                    srv.enqueue(sid, frames[(2 * tick + 1) % 8],
+                                t=float(tick) + 0.5)
+                reports.append(srv.tick(float(tick + 1)))
+            return reports
+
+        plain = run(None)
+        inert = run(ChaosSpec())            # no fault models: inert
+        for rp, ri in zip(plain, inert):
+            assert (rp.n_served, rp.n_quiet, rp.n_requeued) == \
+                (ri.n_served, ri.n_quiet, ri.n_requeued)
+            assert rp.bytes_sent == ri.bytes_sent
+            assert ri.shed == () and ri.n_failed_tx == 0
+            assert ri.ladder_moves == () and ri.device_events == ()
+            for cp, ci in zip(rp.completions, ri.completions):
+                assert cp.sid == ci.sid and cp.seqs == ci.seqs
+                assert cp.wire_bytes == ci.wire_bytes
+                for k, v in cp.result.items():
+                    assert np.array_equal(np.asarray(v),
+                                          np.asarray(ci.result[k])), k
+
+
+# ---------------------------------------------------------------------------
+# fault injection: retries charge bytes, failures requeue, ladders move
+# ---------------------------------------------------------------------------
+
+
+class TestChaosDelivery:
+    def test_failed_tx_requeues_and_ladder_reaches_on_node(self, fa_setup):
+        # a stream whose channel is perma-dead never delivers an offloaded
+        # chunk: every exhausted delivery re-queues (no frame lost) and
+        # walks the ladder down until the terminal all-on-node rung, where
+        # frames finally complete locally
+        ex, frames, base = fa_setup
+        spec = ChaosSpec(loss=ALWAYS_LOST, max_retries=1, seed=3)
+        srv = _server(ex, chunk=2, capacity=2, chaos=spec,
+                      link=ETH_25G_LINK)
+        dec = srv.register("a", fps=1.0, cut="vj", bits=8)
+        assert dec.admitted and dec.cut == "vj", dec
+        delivered = 0
+        for tick in range(6):
+            if len(srv.streams["a"].queue) < 2:
+                srv.enqueue("a", frames[2 * (tick % 4)], t=float(tick))
+                srv.enqueue("a", frames[2 * (tick % 4) + 1],
+                            t=float(tick) + 0.5)
+            rep = srv.tick(float(tick + 1))
+            delivered += sum(c.n_frames for c in rep.completions)
+            if rep.n_failed_tx:
+                # retry bytes hit the uplink even though nothing delivered
+                assert rep.bytes_sent > 0.0
+        st = srv.streams["a"]
+        assert st.tx_failures >= 2
+        assert st.ladder.level == len(st.ladder.rungs) - 1
+        assert tuple(st.ladder.rung) == ("on_node", None)
+        assert st.rung == (None, None)      # placement went local
+        assert delivered > 0                # ...and frames then completed
+        assert srv.seq_audit()["ok"]
+
+    def test_ladder_descends_then_recovers_with_hysteresis(self, fa_setup):
+        ex, frames, base = fa_setup
+        spec = ChaosSpec(loss=SOMETIMES_LOST, max_retries=1, seed=5,
+                         ladder_recover_after=2)
+        srv = _server(ex, chunk=2, capacity=2, chaos=spec,
+                      link=ETH_25G_LINK)
+        engine = srv._chaos
+        dec = srv.register("a", fps=1.0, cut="vj", bits=8)
+        assert dec.admitted and dec.cut == "vj", dec
+        # script the channel: two exhausted deliveries (descend twice),
+        # then clean first-attempt deliveries (recover with hysteresis)
+        engine._injectors["a"] = _ScriptedInjector(
+            ["lost", "lost", "lost", "lost"])
+        levels = [0]
+        for tick in range(8):
+            if len(srv.streams["a"].queue) < 2:
+                srv.enqueue("a", frames[2 * (tick % 4)], t=float(tick))
+                srv.enqueue("a", frames[2 * (tick % 4) + 1],
+                            t=float(tick) + 0.5)
+            rep = srv.tick(float(tick + 1))
+            for _sid, _old, new in rep.ladder_moves:
+                levels.append(new)
+        st = srv.streams["a"]
+        # 0 -> 1 -> 2 (on_node) on the two failures, then two clean probe
+        # deliveries per recovery step walk it back: 2 -> 1 -> 0
+        assert levels[:3] == [0, 1, 2]
+        assert st.ladder.level == 0, (levels, st.ladder.transitions)
+        assert levels == [0, 1, 2, 1, 0]
+        assert srv.seq_audit()["ok"]
+
+    def test_retx_factor_inflates_admission(self, fa_setup):
+        ex, frames, base = fa_setup
+        spec = ChaosSpec(loss=SOMETIMES_LOST, max_retries=2, seed=1)
+        clean = _server(ex, chunk=2, capacity=2, link=ETH_25G_LINK)
+        srv = _server(ex, chunk=2, capacity=2, chaos=spec,
+                      link=ETH_25G_LINK)
+        d0 = clean.register("a", fps=1.0, cut="vj", bits=8)
+        d1 = srv.register("a", fps=1.0, cut="vj", bits=8)
+        factor = ChaosEngine(spec).retx_factor("a")
+        assert factor > 1.0
+        assert d1.predicted_bps == pytest.approx(
+            d0.predicted_bps * factor)
+
+    def test_fault_sequences_deterministic_per_sid(self):
+        spec = ChaosSpec(loss=SOMETIMES_LOST, seed=11,
+                         corrupt_fraction=0.2)
+        a = ChaosEngine(spec).injector_for("cam-7")
+        b = ChaosEngine(spec).injector_for("cam-7")
+        c = ChaosEngine(spec).injector_for("cam-8")
+        sa = [a.attempt(t * 0.1) for t in range(64)]
+        sb = [b.attempt(t * 0.1) for t in range(64)]
+        sc = [c.attempt(t * 0.1) for t in range(64)]
+        assert sa == sb                     # same sid: same fault process
+        assert sa != sc                     # different sid: independent
+
+    def test_faulty_fraction_selects_deterministically(self):
+        spec = ChaosSpec(loss=SOMETIMES_LOST, faulty_fraction=0.5, seed=2)
+        eng = ChaosEngine(spec)
+        picks = {f"cam-{k}": eng.is_faulty(f"cam-{k}") for k in range(64)}
+        assert 10 < sum(picks.values()) < 54    # a real split
+        eng2 = ChaosEngine(spec)
+        assert picks == {s: eng2.is_faulty(s) for s in picks}
+
+
+# ---------------------------------------------------------------------------
+# device-kill failover (tentpole a, satellite 3) — fake multi-device host
+# ---------------------------------------------------------------------------
+
+
+class TestDeviceFailover:
+    def test_kill_resharding_is_bit_identical(self, subproc):
+        out = subproc("""
+            import numpy as np
+            import jax, jax.numpy as jnp
+            from benchmarks.workloads import fa_cascade, fa_scan
+            from repro.camera.face_nn import train_face_nn
+            from repro.camera.pipelines import FaceAuthExecutor
+            from repro.camera.synthetic import face_dataset, security_video
+            from repro.camera.serve import ChaosSpec, ServeConfig, \\
+                StreamingServer
+
+            assert jax.local_device_count() == 8
+            frames, _ = security_video(n_frames=10, motion_frames=5, seed=1)
+            casc = fa_cascade(smoke=True)
+            X, y, _ = face_dataset(n_per_class=80, seed=3)
+            nn = train_face_nn(X, y, steps=60)
+            sf, st, ad = fa_scan(True)
+            ex = FaceAuthExecutor(casc, nn, frames.shape[1],
+                                  frames.shape[2], scale_factor=sf,
+                                  step=st, adaptive=ad)
+            ex.calibrate(frames)
+            assert ex.stream_parallel          # pmap path is live
+
+            def run(spec, ticks):
+                cfg = ServeConfig(chunk=2, capacity=8, tick_s=1.0,
+                                  max_queue_s=100.0)
+                srv = StreamingServer(ex, config=cfg, chaos=spec)
+                for k in range(8):
+                    dec = srv.register(f"s{k}", fps=0.5)
+                    assert dec.admitted, dec
+                srv.prewarm([(None, None)], device_counts=(4,))
+                reps = []
+                for tick in range(ticks):
+                    for k in range(8):
+                        srv.enqueue(f"s{k}", frames[2 * (tick % 4)],
+                                    t=float(tick))
+                        srv.enqueue(f"s{k}", frames[2 * (tick % 4) + 1],
+                                    t=float(tick) + 0.5)
+                    reps.append(srv.tick(float(tick + 1)))
+                return srv, reps
+
+            # healthy 8-device run vs a run whose chaos schedule kills the
+            # last four devices before tick 2 (8 streams re-shard onto a
+            # 4-device pmap), then restores them
+            healthy, hr = run(None, 4)
+            spec = ChaosSpec(device_events=((1, "kill", 7), (1, "kill", 6),
+                                            (1, "kill", 5), (1, "kill", 4),
+                                            (3, "restore", 7),
+                                            (3, "restore", 6),
+                                            (3, "restore", 5),
+                                            (3, "restore", 4)))
+            degraded, dr = run(spec, 4)
+            assert dr[1].device_events == (("kill", 7), ("kill", 6),
+                                           ("kill", 5), ("kill", 4))
+            assert dr[3].device_events[0][0] == "restore"
+            for rh, rd in zip(hr, dr):
+                assert rh.n_served == rd.n_served
+                assert rh.n_quiet == rd.n_quiet
+                for ch, cd in zip(rh.completions, rd.completions):
+                    assert ch.sid == cd.sid and ch.seqs == cd.seqs
+                    for k, v in ch.result.items():
+                        assert np.array_equal(np.asarray(v),
+                                              np.asarray(cd.result[k])), k
+            # the degraded ticks really used the survivor pmap closure
+            keys = set(degraded._group_steps)
+            assert ((None, None), None) in keys
+            assert any(k[1] is not None and len(k[1]) == 4 for k in keys)
+            assert degraded.seq_audit()["ok"]
+            print("FAILOVER_OK")
+        """)
+        assert "FAILOVER_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# checkpoint / restore: brownout-restartable server (tentpole d)
+# ---------------------------------------------------------------------------
+
+
+class TestCheckpointRestore:
+    def test_roundtrip_resumes_bit_identical(self, fa_setup, tmp_path):
+        ex, frames, base = fa_setup
+        pair = _motion_pair(frames, base)
+
+        def feed(srv, tick):
+            for sid in ("a", "b", "c"):
+                if sid in srv.streams and not srv.streams[sid].draining:
+                    srv.enqueue(sid, pair[0], t=float(tick))
+                    srv.enqueue(sid, pair[1], t=float(tick) + 0.5)
+
+        srv = _server(ex, chunk=2, capacity=2, max_queue_frames=4,
+                      link=ETH_25G_LINK)
+        dec = srv.register("a", fps=1.0, cut="vj", bits=8)
+        assert dec.admitted and dec.cut == "vj", dec
+        srv.register("b", fps=1.0)
+        srv.register("c", fps=1.0)
+        for tick in range(3):
+            feed(srv, tick)
+            srv.tick(float(tick + 1))
+        srv.enqueue("c", pair[0], t=3.0)    # mid-drain state survives
+        srv.unregister("c")
+
+        path = srv.checkpoint(str(tmp_path))
+        assert path.endswith(f"step_{srv.tick_count:08d}")
+        audit0 = srv.seq_audit()
+        rest = StreamingServer.restore(str(tmp_path), ex,
+                                       config=srv.cfg)
+        assert rest.seq_audit() == audit0
+        assert rest.tick_count == srv.tick_count
+        assert set(rest.streams) == set(srv.streams)
+        assert rest.streams["c"].draining
+        for sid, st in srv.streams.items():
+            rs = rest.streams[sid]
+            assert (rs.seq_next, rs.delivered_n, rs.last_served_seq,
+                    rs.shed_n, rs.deficit, rs.order) == \
+                (st.seq_next, st.delivered_n, st.last_served_seq,
+                 st.shed_n, st.deficit, st.order)
+            assert [e[2] for e in rs.queue] == [e[2] for e in st.queue]
+
+        # both servers continue identically: no frame lost, none re-served
+        for tick in range(3, 6):
+            feed(srv, tick)
+            feed(rest, tick)
+            ro, rr = srv.tick(float(tick + 1)), rest.tick(float(tick + 1))
+            assert [(c.sid, c.seqs, c.kind) for c in ro.completions] == \
+                [(c.sid, c.seqs, c.kind) for c in rr.completions]
+            for co, cr in zip(ro.completions, rr.completions):
+                for k, v in co.result.items():
+                    assert np.array_equal(np.asarray(v),
+                                          np.asarray(cr.result[k])), k
+        assert srv.seq_audit() == rest.seq_audit()
+        assert rest.seq_audit()["ok"]
+
+    def test_restore_preserves_ladder_and_chaos_state(self, fa_setup,
+                                                      tmp_path):
+        ex, frames, base = fa_setup
+        spec = ChaosSpec(loss=ALWAYS_LOST, max_retries=0, seed=9)
+        srv = _server(ex, chunk=2, capacity=2, chaos=spec,
+                      link=ETH_25G_LINK)
+        dec = srv.register("a", fps=1.0, cut="vj", bits=8)
+        assert dec.admitted and dec.cut == "vj", dec
+        for tick in range(3):
+            if len(srv.streams["a"].queue) < 2:
+                srv.enqueue("a", frames[0], t=float(tick))
+                srv.enqueue("a", frames[1], t=float(tick) + 0.5)
+            srv.tick(float(tick + 1))
+        lvl = srv.streams["a"].ladder.level
+        assert lvl > 0                       # the incident is in flight
+        srv.checkpoint(str(tmp_path))
+        rest = StreamingServer.restore(str(tmp_path), ex, config=srv.cfg,
+                                       chaos=spec)
+        rst = rest.streams["a"]
+        assert rst.ladder.level == lvl
+        assert rst.ladder.rungs == srv.streams["a"].ladder.rungs
+        assert rst.ladder.transitions == srv.streams["a"].ladder.transitions
+        assert rest.seq_audit() == srv.seq_audit()
+        assert rest.seq_audit()["ok"]
+
+    def test_restore_errors_are_named(self, fa_setup, tmp_path):
+        ex, frames, base = fa_setup
+        with pytest.raises(ServeError, match="no complete checkpoint"):
+            StreamingServer.restore(str(tmp_path), ex)
+        # a foreign checkpoint (wrong schema) is refused, not misread
+        from repro.ckpt.checkpoint import save_checkpoint
+        save_checkpoint(str(tmp_path), 0, {"w": np.zeros(3)},
+                        extra={"version": 99})
+        with pytest.raises(ServeError, match="version"):
+            StreamingServer.restore(str(tmp_path), ex)
