@@ -122,6 +122,16 @@ def rows(smoke: bool = False):
                 f"fault-free laddered session, {n_sends} sends at (nn,16)"))
 
     # ---- sweep: loss rate x outage duty ------------------------------------
+    # The §15 per-stream SLO ledger shadows the sweep: every delivered
+    # send's auth decisions are attributed to the rung that served it
+    # (from the cell's own DeliveryRecords), with the fault-free run as
+    # the pinned reference — the ledger's rung-attributed flip counts
+    # must reproduce the sweep's flip numbers within 1 flipped unit.
+    from repro.obs import SLOLedger
+
+    ledger = SLOLedger()
+    ledger_match = True
+    max_flip_diff = 0
     loss_rates = (0.05, 0.1) if smoke else (0.02, 0.05, 0.1, 0.2)
     duties = (0.0, 0.2) if smoke else (0.0, 0.1, 0.2)
     for loss in loss_rates:
@@ -142,6 +152,18 @@ def rows(smoke: bool = False):
             retx = sum(r.attempts - 1 for r in sess.records)
             att = sum(r.attempts for r in sess.records)
             tag = f"loss{int(loss * 100):02d}_duty{int(duty * 100):02d}"
+            cell_flip_units = 0
+            for a, b, rec in zip(auths, base_auth, sess.records):
+                rung = "on_node" if rec.fallback else (rec.cut, rec.bits)
+                ledger.observe_latency(tag, rung, rec.latency_s)
+                if a is None:
+                    continue
+                ledger.observe_auth(tag, rung, a, b)
+                cell_flip_units += int(np.sum(a != b))
+            led_flipped, _led_total = ledger.flip_counts(sid=tag)
+            max_flip_diff = max(max_flip_diff,
+                                abs(led_flipped - cell_flip_units))
+            ledger_match &= abs(led_flipped - cell_flip_units) <= 1
             out.append(("resilience", f"{tag}_flip",
                         f"{float(np.mean(flips)) if flips else 1.0:.4f}",
                         "flipped-auth fraction vs fault-free"))
@@ -155,6 +177,23 @@ def rows(smoke: bool = False):
                         f"{float(np.mean(delivered)):.4f}",
                         f"delivery fraction over {n_sends} sends "
                         f"(rung ends {sess.ladder.rung})"))
+
+    # ---- ledger: rung-attributed accuracy SLO ------------------------------
+    rung_flips = {}
+    for row in ledger.report():
+        f, n = rung_flips.get(row["rung"], (0, 0))
+        rung_flips[row["rung"]] = (f + row["flipped"], n + row["compared"])
+    for rk in sorted(rung_flips):
+        f, n = rung_flips[rk]
+        out.append(("resilience", f"ledger_flip[{rk}]",
+                    f"{f / n if n else 0.0:.4f}",
+                    f"rung-attributed auth-flip rate ({f}/{n} units) "
+                    "from the per-stream SLO ledger"))
+    out.append(("resilience", "ledger_flip_match", int(ledger_match),
+                f"ledger rung-attributed flip counts vs sweep flip "
+                f"counts, max |diff|={max_flip_diff} (acceptance <= 1)"))
+    assert ledger_match, \
+        "SLO ledger flip attribution diverged from the sweep (> 1 flip)"
 
     # ---- brownout recovery --------------------------------------------------
     import tempfile

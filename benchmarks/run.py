@@ -10,7 +10,9 @@ and wall time per section.
 to ``OUT_DIR/BENCH_<section>.json`` — the machine-readable perf
 trajectory (BENCH_detect.json carries the fused-front-end speedup,
 BENCH_vr.json the fused VR depth-executor speedup, BENCH_fa_hotpath.json
-the §III streaming-executor speedup).
+the §III streaming-executor speedup).  Every file shares the ``bench.v1``
+top-level schema (``repro.obs.bench.bench_record``) so any two runs are
+machine-diffable: ``python -m repro.obs diff BENCH_a.json BENCH_b.json``.
 
 ``--smoke`` runs EVERY section at toy sizes, fully offline and on a few
 seconds' budget each — the CI probe (tests/test_bench_smoke.py) that
@@ -19,10 +21,10 @@ for liveness, not for quoting numbers.
 """
 
 import argparse
-import json
 import os
 import time
 
+from repro.obs.bench import bench_record, write_bench
 
 SECTIONS = {}
 
@@ -158,10 +160,11 @@ def main():
         if args.json:
             os.makedirs(args.json, exist_ok=True)
             path = os.path.join(args.json, f"BENCH_{name}.json")
-            with open(path, "w") as fh:
-                json.dump({"section": name, "wall_s": wall,
-                           "rows": [[str(c) for c in row] for row in rows]},
-                          fh, indent=1)
+            # one shared top-level schema (bench.v1) for every section so
+            # BENCH_*.json files are machine-diffable: repro.obs bench-diff
+            # keys rows by (tag, metric) and ignores wall/timestamps
+            write_bench(path, bench_record(name, rows, wall,
+                                           smoke=bool(args.smoke)))
             print(f"# wrote {path}")
 
 

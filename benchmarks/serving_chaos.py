@@ -16,7 +16,13 @@ schedule x client brownout — over a WISPCam fleet on one
   serving SLO;
 * the **zero-fault pin**: a run under an inert ``ChaosSpec`` is compared
   leaf-for-leaf to the same drive with no chaos plane at all — the PR 8
-  serving path — and must be bit-identical.
+  serving path — and must be bit-identical;
+* the **§15 telemetry plane**: the zero-fault cell re-driven with
+  ``repro.obs.Telemetry`` attached (p99 overhead must stay under 5% at
+  acceptance scale), plus a loss+kill drive whose exported JSONL alone
+  must prove the kill chain — injected device-kill -> same-tick failover
+  re-shard -> ladder descent -> device restore -> serving again — and
+  whose Perfetto export loads as well-formed ``trace_event`` JSON.
 
 The worst cell (loss + kill + brownout) additionally browns out the
 *server* mid-drive: the fleet checkpoints at a tick boundary, the server
@@ -199,12 +205,13 @@ class _CellHarness:
 
 
 def _build_fleet(ex, ctl, link, cfg, pools, spec, *, n_local, n_off,
-                 off_feed, shared_steps, shared_execs, prewarm_kill):
+                 off_feed, shared_steps, shared_execs, prewarm_kill,
+                 telemetry=None):
     from repro.camera.serve import StreamingServer
 
     quiet, hot = pools
     srv = StreamingServer(ex, link=link, controller=ctl, config=cfg,
-                          chaos=spec)
+                          chaos=spec, telemetry=telemetry)
     srv._group_steps = shared_steps       # reuse compiled placement groups
     srv._offload_execs = shared_execs     # across cells (same cfg/devices)
     specs = {}
@@ -237,7 +244,8 @@ def _build_fleet(ex, ctl, link, cfg, pools, spec, *, n_local, n_off,
 
 
 def _run_cell(label, lo, ki, br, env, *, n_local, n_off, ticks,
-              off_feed=1, smoke=True, server_brownout=False):
+              off_feed=1, smoke=True, server_brownout=False,
+              telemetry=None):
     from repro.camera.serve import ChaosEngine, StreamingServer
 
     ex, ctl, link, cfg, pools, shared_steps, shared_execs = env
@@ -245,7 +253,7 @@ def _run_cell(label, lo, ki, br, env, *, n_local, n_off, ticks,
     srv, specs = _build_fleet(
         ex, ctl, link, cfg, pools, spec, n_local=n_local, n_off=n_off,
         off_feed=off_feed, shared_steps=shared_steps,
-        shared_execs=shared_execs, prewarm_kill=ki)
+        shared_execs=shared_execs, prewarm_kill=ki, telemetry=telemetry)
     engine = srv._chaos
     h = _CellHarness(srv, specs, engine)
 
@@ -300,6 +308,98 @@ def _run_cell(label, lo, ki, br, env, *, n_local, n_off, ticks,
         "recover_at": recover_at,
         "retx_factor": (ChaosEngine(spec).retx_factor("o0")
                         if spec is not None else 1.0),
+    }
+
+
+def kill_chain(records):
+    """Verify a device-kill is traceable end-to-end from trace records
+    alone (the §15 acceptance): the injected ``chaos/device_kill`` event,
+    a ``failover`` re-shard at the SAME tick, a ``ladder`` descent at or
+    after it, the scheduled ``chaos/device_restore``, and a post-restore
+    ``tick`` that served work again.  Returns a dict of the correlated
+    ticks plus ``ok``; works on TraceRecord objects or their JSONL dicts
+    (so the proof never needs the live server).
+    """
+    def _get(r, k, default=None):
+        if isinstance(r, dict):
+            return r.get(k, r.get("args", {}).get(k, default))
+        return getattr(r, k, None) if k in ("kind", "name", "tick") \
+            else r.args.get(k, default)
+
+    kills = [r for r in records if _get(r, "kind") == "chaos"
+             and _get(r, "name") == "device_kill"]
+    if not kills:
+        return {"ok": False, "why": "no device_kill in trace"}
+    kill_tick = min(_get(r, "tick") for r in kills)
+    failovers = [r for r in records if _get(r, "kind") == "failover"
+                 and _get(r, "tick") == kill_tick]
+    descents = [r for r in records if _get(r, "kind") == "ladder"
+                and _get(r, "name") == "descend"
+                and _get(r, "tick") >= kill_tick]
+    restores = [r for r in records if _get(r, "kind") == "chaos"
+                and _get(r, "name") == "device_restore"]
+    restore_tick = min((_get(r, "tick") for r in restores), default=None)
+    recovered = [r for r in records if _get(r, "kind") == "tick"
+                 and restore_tick is not None
+                 and _get(r, "tick") > restore_tick
+                 and int(_get(r, "n_served", 0)) > 0]
+    return {
+        "ok": bool(failovers and descents and restores and recovered),
+        "kill_tick": kill_tick,
+        "failover_tick": (_get(failovers[0], "tick") if failovers
+                          else None),
+        "descend_tick": (min(_get(r, "tick") for r in descents)
+                         if descents else None),
+        "restore_tick": restore_tick,
+        "recovered_tick": (min(_get(r, "tick") for r in recovered)
+                           if recovered else None),
+    }
+
+
+def _telemetry_probe(env, *, n_local, n_off, ticks, off_feed, smoke,
+                     base_p99):
+    """Telemetry-enabled drives: the p99 overhead cell (vs the plain
+    zero-fault cell already measured) and the loss+kill trace-export
+    drive whose JSONL must prove the kill chain."""
+    import os
+    import tempfile
+
+    from repro.obs import Telemetry, TraceRecorder
+
+    tel = Telemetry(enabled=True)
+    cell = _run_cell("zero_fault_telemetry", False, False, False, env,
+                     n_local=n_local, n_off=n_off, ticks=ticks,
+                     off_feed=off_feed, smoke=smoke, telemetry=tel)
+    overhead = cell["p99_batch_s"] / max(base_p99, 1e-9) - 1.0
+    totals = tel.counters.totals()
+
+    tel2 = Telemetry(enabled=True)
+    _run_cell("trace_drive", True, True, False, env,
+              n_local=n_local, n_off=n_off, ticks=ticks,
+              off_feed=off_feed, smoke=smoke, telemetry=tel2)
+    with tempfile.TemporaryDirectory() as td:
+        jsonl = os.path.join(td, "trace.jsonl")
+        perfetto = os.path.join(td, "trace_perfetto.json")
+        tel2.trace.to_jsonl(jsonl)
+        tel2.trace.export_perfetto(perfetto)
+        replayed = TraceRecorder.load_jsonl(jsonl)
+        chain = kill_chain(replayed)
+        with open(perfetto) as fh:
+            pf = json.load(fh)
+        perfetto_ok = (isinstance(pf.get("traceEvents"), list)
+                       and len(pf["traceEvents"]) == len(replayed)
+                       and all("ph" in e and "ts" in e
+                               for e in pf["traceEvents"]))
+    return {
+        "p99_telemetry_s": cell["p99_batch_s"],
+        "p99_overhead_frac": overhead,
+        "counter_ticks": totals.get("serve.ticks", 0),
+        "counter_delivered": totals.get("serve.frames_delivered", 0),
+        "counter_link_attempts": totals.get("serve.link_attempts", 0),
+        "n_trace_records": len(replayed),
+        "run_id": tel2.run_id,
+        "chain": chain,
+        "perfetto_ok": perfetto_ok,
     }
 
 
@@ -404,9 +504,19 @@ def _child(mode: str):
                                n_off=no, ticks=tk,
                                off_feed=cfg.chunk + 1,
                                smoke=smoke, server_brownout=worst))
+
+    # §15 telemetry plane: overhead at the zero-fault cell's own scale
+    # (acceptance scale in full mode) + the JSONL kill-chain proof
+    zero = next(c for c in cells if c["label"] == "loss0_kill0_brown0")
+    nl, no, tk = n_local, n_off, ticks
+    if not smoke:
+        nl, no, tk = 64, 960, 21
+    telemetry = _telemetry_probe(env, n_local=nl, n_off=no, ticks=tk,
+                                 off_feed=cfg.chunk + 1, smoke=smoke,
+                                 base_p99=zero["p99_batch_s"])
     print(json.dumps({"mode": mode, "zero_fault_bitexact": int(bitexact),
                       "n_devices": jax.local_device_count(),
-                      "cells": cells}))
+                      "cells": cells, "telemetry": telemetry}))
 
 
 # ---------------------------------------------------------------------------
@@ -496,6 +606,41 @@ def rows(smoke: bool = False):
     assert any(c["failed_tx"] > 0 or c["ladder_moves"] > 0
                for c in loss_cells), \
         "loss cells produced no observable fault symptoms"
+
+    # §15 telemetry plane rows
+    tel = data["telemetry"]
+    chain = tel["chain"]
+    out.append(("serving_chaos", "telemetry_p99_overhead_frac",
+                f"{tel['p99_overhead_frac']:.4f}",
+                f"p99 tick latency with §15 telemetry enabled "
+                f"({tel['p99_telemetry_s']:.3f}s) vs the plain zero-fault "
+                "cell; acceptance < 0.05"))
+    out.append(("serving_chaos", "telemetry_counters",
+                str(tel["counter_ticks"]),
+                f"serve.ticks={tel['counter_ticks']} frames_delivered="
+                f"{tel['counter_delivered']} link_attempts="
+                f"{tel['counter_link_attempts']} (device-lazy panel, "
+                "one sync at export)"))
+    out.append(("serving_chaos", "trace_kill_chain",
+                "1" if chain["ok"] else "0",
+                f"device-kill traceable from JSONL alone: kill@t"
+                f"{chain.get('kill_tick')} -> failover@t"
+                f"{chain.get('failover_tick')} -> ladder-descend@t"
+                f"{chain.get('descend_tick')} -> restore@t"
+                f"{chain.get('restore_tick')} -> serving-again@t"
+                f"{chain.get('recovered_tick')} "
+                f"({tel['n_trace_records']} records, run "
+                f"{tel['run_id']})"))
+    out.append(("serving_chaos", "trace_perfetto_export",
+                "1" if tel["perfetto_ok"] else "0",
+                "chrome://tracing / Perfetto trace_event JSON: one event "
+                "per JSONL record, ph/ts present on every event"))
+    assert chain["ok"], f"kill chain not traceable from JSONL: {chain}"
+    assert tel["perfetto_ok"], "Perfetto export malformed"
+    if not smoke:
+        assert tel["p99_overhead_frac"] < 0.05, \
+            (f"telemetry p99 overhead {tel['p99_overhead_frac']:.3f} "
+             "breaches the 5% acceptance bound")
     return out
 
 

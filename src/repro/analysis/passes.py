@@ -10,6 +10,8 @@ registered static plans.
   precision  — int8/int4 domain discipline in quant + codec subgraphs
   kernel     — Pallas BlockSpec divisibility, VMEM budget, ref signatures
   cut        — offload payload schema coverage + byte-accounting soundness
+  obs        — telemetry-plane contracts (DESIGN.md §15): aux declarations,
+               uncharged sidebands, counter dtype discipline
 """
 
 from __future__ import annotations
@@ -423,11 +425,83 @@ class CutPass:
         return PassResult(self.family, subjects, findings)
 
 
+# ---------------------------------------------------------------------------
+# 5. telemetry-plane lint (DESIGN.md §15)
+# ---------------------------------------------------------------------------
+
+class ObsPass:
+    """O001–O003: the telemetry plane's static contracts.
+
+    O001  every registered executor target resolves to a TELEMETRY_AUX
+          declaration (an empty tuple is a legal "emits nothing"), so
+          the aux-output surface is auditable, not accidental.
+    O002  no ``tel_``-prefixed array ever enters a WirePayload — neither
+          emitted by a node half nor admitted by a PayloadSchema.
+          Telemetry that rides the wire is uncharged bytes; offload
+          counters belong at the session layer.
+    O003  every declared counter dtype is int32/uint32 (the panel's
+          accumulation contract; wider or float counters would perturb
+          dispatch caching and the 4 B accounting assumption).
+    """
+
+    family = "obs"
+
+    def run(self, ctx: PassContext) -> PassResult:
+        import jax
+
+        from repro.obs.counters import (ALLOWED_DTYPES, TEL_PREFIX,
+                                        telemetry_decl)
+
+        findings, subjects = [], []
+        for tgt in ctx.targets:
+            subjects.append(tgt.name)
+            decl = telemetry_decl(tgt.name)
+            if decl is None:
+                findings.append(Finding(
+                    "obs", "O001", tgt.name, "decl",
+                    "registered executor target has no TELEMETRY_AUX "
+                    "declaration: the telemetry plane cannot audit its aux "
+                    "outputs (declare an empty tuple for targets that "
+                    "intentionally emit no counters)"))
+                continue
+            for cname, dt in decl:
+                if dt not in ALLOWED_DTYPES:
+                    findings.append(Finding(
+                        "obs", "O003", tgt.name, cname,
+                        f"declared telemetry counter {cname!r} has dtype "
+                        f"{dt!r}; counters are {ALLOWED_DTYPES} only"))
+        for fam in ctx.cut_families:
+            for cut in fam.executor_cls.CUTS:
+                subj = f"{fam.name}[{cut}]"
+                subjects.append(subj)
+                schema = fam.executor_cls.PAYLOAD_SCHEMA.get(cut)
+                if schema is not None:
+                    admitted = set(schema.declared(None)) \
+                        | set(schema.declared(8)) | set(schema.session)
+                    for f in sorted(x for x in admitted
+                                    if x.startswith(TEL_PREFIX)):
+                        findings.append(Finding(
+                            "obs", "O002", subj, f,
+                            f"PayloadSchema admits telemetry field {f!r}: "
+                            "telemetry must never ride the wire contract"))
+                ex = fam.make(cut, None)
+                arrays, _ = jax.eval_shape(ex._node_fn, *fam.node_args(ex))
+                for f in sorted(x for x in arrays
+                                if x.startswith(TEL_PREFIX)):
+                    findings.append(Finding(
+                        "obs", "O002", subj, f,
+                        f"node half emits telemetry array {f!r} into the "
+                        "WirePayload: uncharged sideband bytes on the air "
+                        "(hoist the counter to the session layer)"))
+        return PassResult(self.family, subjects, findings)
+
+
 PASSES = {
     "dispatch": DispatchPass,
     "precision": PrecisionPass,
     "kernel": KernelPass,
     "cut": CutPass,
+    "obs": ObsPass,
 }
 
 

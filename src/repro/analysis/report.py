@@ -17,7 +17,7 @@ import os
 from typing import Iterable
 
 
-FAMILIES = ("dispatch", "precision", "kernel", "cut")
+FAMILIES = ("dispatch", "precision", "kernel", "cut", "obs")
 
 DEFAULT_BASELINE_PATH = os.path.join(os.path.dirname(__file__),
                                      "baseline.json")

@@ -137,6 +137,10 @@ class CutController:
         self.window = 32
         self._window_obs: dict = {}
         self.resolves = 0
+        # optional §15 telemetry sink (set attribute-style by the owner:
+        # ``controller.telemetry = repro.obs.Telemetry(...)``); observed
+        # after each windowed re-solve, never consulted by the solver
+        self.telemetry = None
 
     # -- 1. calibrate --------------------------------------------------------
 
@@ -355,6 +359,12 @@ class CutController:
                         sol, cut_after=best,
                         report=self._report_for(pipe, best),
                         objective=self._objective(pipe, best))
+            tel = self.telemetry
+            if tel is not None and getattr(tel, "enabled", False):
+                tel.counters.bump("controller.resolves")
+                tel.emit("dispatch", "resolve_window", cut=sol.cut_after,
+                         objective=float(sol.objective),
+                         resolves=self.resolves)
             return sol
         finally:
             self.measurements = saved

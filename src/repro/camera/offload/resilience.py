@@ -42,6 +42,8 @@ from repro.camera.offload.payloads import (
     SESSION_SIDEBAND_BYTES,
     WirePayload,
 )
+from repro.obs.ledger import rung_key as _ledger_rung_key
+from repro.obs.telemetry import telemetry_on
 
 # wire bytes of an all-on-node delivery: the paper's "ship the decision"
 # terminal rung — per-frame auth bits plus one i32 count
@@ -394,6 +396,14 @@ class OffloadSession:
     With ``injector=None`` (or a fully-disabled injector) and a ladder
     that never moves, outputs are bit-exact with the wrapped executor —
     the PR-5 pinning contract.
+
+    ``telemetry=`` (a :class:`repro.obs.Telemetry`) makes the session a
+    §15 trace/counter source: every send is charged to per-attempt
+    counters (``offload.attempts`` / ``offload.retries`` /
+    ``offload.crc_fail`` / ``offload.bytes_on_air`` ...), emits one
+    ``link`` span, and feeds the per-stream SLO ledger under ``sid=``.
+    Telemetry observes the DeliveryRecord after the fact — it never
+    perturbs the fault process, the clock, or the payload bytes.
     """
 
     def __init__(self, executor=None, *, make_executor=None, cut=None,
@@ -403,7 +413,8 @@ class OffloadSession:
                  max_retries: int = 4, timeout_s: float | None = None,
                  backoff_s: float | None = None, ckpt_dir: str | None = None,
                  stage_cost_s=0.02, node_active_w: float = 200e-6,
-                 on_node_fn=None, keep_ckpts: int = 8):
+                 on_node_fn=None, keep_ckpts: int = 8,
+                 telemetry=None, sid: str = ""):
         if executor is None and make_executor is None:
             raise ValueError("pass executor= or make_executor=")
         if executor is not None:
@@ -426,6 +437,9 @@ class OffloadSession:
         self.node_active_w = float(node_active_w)
         self.on_node_fn = on_node_fn
         self.keep_ckpts = int(keep_ckpts)
+        self.telemetry = telemetry
+        self.sid = str(sid)
+        self._tel_on = telemetry_on(telemetry)
         self._runners: dict = {}
         self.now = 0.0                     # simulated session clock
         self.records: list = []
@@ -697,9 +711,48 @@ class OffloadSession:
             energy_j=tx_j + compute_s * self.node_active_w,
             brownouts=brownouts, restores=restores, recovery_s=recovery_s)
         self.records.append(rec)
+        if self._tel_on:
+            self._record_delivery(rec, t0)
         if self.ladder is not None:
+            n_tr = len(self.ladder.transitions)
             self.ladder.observe(rec)
+            if self._tel_on and len(self.ladder.transitions) > n_tr:
+                _s, old, new = self.ladder.transitions[-1]
+                self.telemetry.emit(
+                    "ladder", "descend" if new > old else "recover",
+                    t=self.now, sid=self.sid, seq=rec.seq,
+                    old_level=old, new_level=new,
+                    rung=_ledger_rung_key(self.ladder.rung))
+                self.telemetry.counters.bump("offload.ladder_moves")
         return (result if delivered else None), rec
+
+    def _record_delivery(self, rec: DeliveryRecord, t0: float) -> None:
+        """Per-attempt accounting + one link trace span per send (§15)."""
+        tel = self.telemetry
+        c = tel.counters
+        c.bump("offload.sends")
+        c.bump("offload.attempts", rec.attempts)
+        c.bump("offload.retries", rec.attempts - 1)
+        c.bump("offload.lost", rec.lost)
+        c.bump("offload.crc_fail", rec.corrupt)
+        c.bump("offload.bytes_on_air", int(round(rec.bytes_on_air)))
+        c.bump("offload.delivered" if rec.delivered else "offload.dropped")
+        if rec.fallback:
+            c.bump("offload.fallbacks")
+        if rec.brownouts:
+            c.bump("offload.brownouts", rec.brownouts)
+        if rec.restores:
+            c.bump("offload.restores", rec.restores)
+        rung = "on_node" if rec.fallback else (rec.cut, rec.bits)
+        tel.emit(
+            "link", f"send[{_ledger_rung_key(rung)}]", t=t0,
+            dur=rec.latency_s, sid=self.sid, seq=rec.seq,
+            delivered=rec.delivered, fallback=rec.fallback,
+            attempts=rec.attempts, lost=rec.lost, crc_fail=rec.corrupt,
+            payload_b=rec.payload_bytes, on_air_b=rec.bytes_on_air,
+            brownouts=rec.brownouts, restores=rec.restores,
+            energy_j=rec.energy_j)
+        tel.ledger.observe_latency(self.sid, rung, rec.latency_s)
 
     def _receive(self, seq, crc, attempt):
         if seq in self._received_seqs:

@@ -251,14 +251,18 @@ class VRRigExecutor:
 
     def __init__(self, spec, max_disp: int = 32, n_iters: int = 8,
                  ipd_px: float = 6.0, use_pallas: bool | None = None,
-                 interpret: bool = False, rig_parallel: bool | None = None):
+                 interpret: bool = False, rig_parallel: bool | None = None,
+                 telemetry=None):
         import functools
 
         import jax
 
         from repro.camera.bssa import bssa_depth
         from repro.camera.stitch import stereo_panorama
+        from repro.obs.telemetry import telemetry_on
 
+        self.telemetry = telemetry
+        self._tel_on = telemetry_on(telemetry)
         self.spec = spec
         self.max_disp = max_disp
         self.n_iters = n_iters
@@ -273,21 +277,54 @@ class VRRigExecutor:
         # their own jit regions (camera/offload's split executors)
         self.pair_depth = pair_depth
         self.pano_fn = functools.partial(stereo_panorama, ipd_px=ipd_px)
-        self._depth = jax.jit(jax.vmap(pair_depth))
-        self._depth_pmap = jax.pmap(pair_depth) if rig_parallel else None
-        self._pano = jax.jit(self.pano_fn)
+        if self._tel_on:
+            # §15 in-graph counters: same dispatch, one extra int32 scalar
+            # per region (TELEMETRY_AUX vr_rig.*); the disabled branch
+            # below traces the exact pre-obs closures
+            from repro.obs.counters import graph_counters
+
+            def pair_depth_tel(left, right):
+                return pair_depth(left, right), graph_counters(pairs=1)
+
+            def pano_tel(lefts, rights, depths):
+                pano = self.pano_fn(lefts, rights, depths)
+                return pano, graph_counters(views=2 * lefts.shape[0])
+
+            self._depth = jax.jit(jax.vmap(pair_depth_tel))
+            self._depth_pmap = (jax.pmap(pair_depth_tel)
+                                if rig_parallel else None)
+            self._pano = jax.jit(pano_tel)
+        else:
+            self._depth = jax.jit(jax.vmap(pair_depth))
+            self._depth_pmap = jax.pmap(pair_depth) if rig_parallel else None
+            self._pano = jax.jit(self.pano_fn)
 
     def depth_maps(self, lefts, rights):
         """(n_pairs, h, w) x2 -> (n_pairs, h, w) refined depth."""
         import jax
+        import jax.numpy as jnp
 
         if (self._depth_pmap is not None
                 and lefts.shape[0] <= jax.local_device_count()):
-            return self._depth_pmap(lefts, rights)
-        return self._depth(lefts, rights)
+            out = self._depth_pmap(lefts, rights)
+        else:
+            out = self._depth(lefts, rights)
+        if self._tel_on:
+            depths, aux = out
+            self.telemetry.counters.add("vr.pairs",
+                                        jnp.sum(aux["tel_pairs"]))
+            return depths
+        return out
 
     def panorama(self, lefts, rights, depths):
         """(left_pano, right_pano) from per-pair views + depth maps."""
+        import jax.numpy as jnp
+
+        if self._tel_on:
+            pano, aux = self._pano(lefts, rights, depths)
+            self.telemetry.counters.add("vr.views",
+                                        jnp.sum(aux["tel_views"]))
+            return pano
         return self._pano(lefts, rights, depths)
 
     def __call__(self, lefts, rights):
@@ -392,12 +429,20 @@ class FaceAuthExecutor:
                  frame_capacity: int | None = None,
                  window_capacity: int = 64, bits: int = 8,
                  auth_threshold: float = 0.5, use_pallas: bool | None = None,
-                 interpret: bool = False, stream_parallel: bool | None = None):
+                 interpret: bool = False, stream_parallel: bool | None = None,
+                 telemetry=None):
         import jax
 
         from repro.camera.face_nn import make_sigmoid_lut
         from repro.camera.viola_jones import FusedDetector
         from repro.kernels.quant_matmul.ops import quantize_nn
+        from repro.obs.telemetry import telemetry_on
+
+        # §15 telemetry: when enabled, the funnel emits static-shape
+        # ``tel_`` int32 aux scalars from the SAME dispatch (checked at
+        # _rebuild time — disabled executors trace the pre-obs jaxpr)
+        self.telemetry = telemetry
+        self._tel_on = telemetry_on(telemetry)
 
         if lut is None:
             lut, lut_meta = make_sigmoid_lut()
@@ -572,6 +617,24 @@ class FaceAuthExecutor:
                                  casc_drop_m, wsel, wvalid, win_dropped_m,
                                  s, auth, n_auth_m)
 
+        if self._tel_on:
+            # §15 in-graph counters: tel_ int32 scalars hoisted out of the
+            # same dispatch (TELEMETRY_AUX["face_auth.funnel"]).  Gated at
+            # rebuild time, so a disabled executor traces the exact jaxpr
+            # above and returns bit-identical outputs.
+            from repro.obs.counters import graph_counters
+
+            fused = funnel
+
+            def funnel(frames, *c):
+                out = fused(frames, *c)
+                out.update(graph_counters(
+                    windows=jnp.sum(out["n_windows"]),
+                    auth=jnp.sum(out["n_auth"]),
+                    motion_dropped=out["motion_dropped"],
+                    cascade_dropped=jnp.sum(out["cascade_dropped"])))
+                return out
+
         self.stages = FunnelStages(
             motion=stage_motion, detect=stage_detect, gather=stage_gather,
             nn=stage_nn, scatter=stage_scatter, split_consts=split_consts,
@@ -631,8 +694,12 @@ class FaceAuthExecutor:
         """One stream: (B, h, w) frames -> :class:`FAExecResult`."""
         import jax.numpy as jnp
 
-        return FAExecResult(**self._single(jnp.asarray(frames),
-                                           *self._consts))
+        out = self._single(jnp.asarray(frames), *self._consts)
+        if self._tel_on:
+            # pop the tel_ aux scalars into the panel device-lazily — no
+            # host sync here; totals() materializes at export time
+            out = self.telemetry.counters.consume(dict(out), prefix="fa.")
+        return FAExecResult(**out)
 
     def batch_step(self, n_streams: int, chunk: int,
                    stream_parallel: bool | None = None, devices=None):
@@ -750,5 +817,14 @@ class FaceAuthExecutor:
         frames = jnp.asarray(frames)
         if (self._pmapped is not None
                 and frames.shape[0] <= jax.local_device_count()):
-            return FAExecResult(**self._pmapped(frames, *self._consts))
-        return FAExecResult(**self._multi(frames, *self._consts))
+            out = self._pmapped(frames, *self._consts)
+        else:
+            out = self._multi(frames, *self._consts)
+        if self._tel_on:
+            # vmapped/pmapped tel_ aux carry a leading stream axis — sum
+            # device-side before the lazy accumulate (still no host sync)
+            out = dict(out)
+            for k in [k for k in out if k.startswith("tel_")]:
+                self.telemetry.counters.add("fa." + k[4:],
+                                            jnp.sum(out.pop(k)))
+        return FAExecResult(**out)

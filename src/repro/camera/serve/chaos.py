@@ -138,6 +138,15 @@ class ChaosEngine:
             self._injectors[sid] = inj
         return inj
 
+    def fault_id(self, sid: str) -> int:
+        """Stable correlation id of ``sid``'s fault process (its derived
+        injector seed; 0 for clean streams).  The §15 trace stamps this
+        on every link event so a recorded drive can be joined back to
+        the exact seeded chaos trajectory offline."""
+        if not self.is_faulty(sid):
+            return 0
+        return (self.spec.seed * 0x1_0000_0001 + self._salt(sid)) % (2 ** 63)
+
     def node_powered(self, sid: str, t: float) -> bool:
         """Client-side brownout gate: is ``sid``'s camera powered at ``t``?
 

@@ -276,19 +276,29 @@ class StreamingServer:
     shared uplink every offloaded stream transmits on.  ``chaos`` (a
     :class:`~repro.camera.serve.chaos.ChaosSpec` or ``ChaosEngine``)
     arms the §14 fault plane; None — or an inert spec — leaves every
-    served output bit-identical to the pre-chaos runtime.
+    served output bit-identical to the pre-chaos runtime.  ``telemetry``
+    (a :class:`repro.obs.Telemetry`) arms the §15 observability plane:
+    per-tick spans, link/chaos/ladder/failover trace events, fleet
+    counters, and the per-(stream, rung) SLO ledger; None or disabled
+    changes nothing — not one host branch, not one traced graph.
     """
 
     def __init__(self, base, *, link=None, controller=None,
-                 config: ServeConfig = ServeConfig(), chaos=None):
+                 config: ServeConfig = ServeConfig(), chaos=None,
+                 telemetry=None):
         import jax
 
         from repro.camera.offload.link import BACKSCATTER
+        from repro.obs.telemetry import telemetry_on
 
         self.base = base
         self.cfg = config
         self.link = link or BACKSCATTER
         self.controller = controller
+        # §15 telemetry plane: None or disabled leaves every host code
+        # path and every traced graph exactly as the pre-obs runtime
+        self.telemetry = telemetry
+        self._tel_on = telemetry_on(telemetry)
         self.h, self.w = base.det.grid.h, base.det.grid.w
         self._streams: dict = {}
         self._group_steps: dict = {}
@@ -495,6 +505,12 @@ class StreamingServer:
             raise ServeError(
                 "cannot kill the last healthy device — the serving host "
                 "needs at least one")
+        if self._tel_on:
+            self.telemetry.emit(
+                "chaos", "device_kill", t=self.tick_count * self.cfg.tick_s,
+                tick=self.tick_count, device=int(idx),
+                healthy=len(self._healthy()))
+            self.telemetry.counters.bump("serve.device_kills")
 
     def restore_device(self, idx: int):
         """Bring device ``idx`` back; groups re-shard to the wider set.
@@ -505,6 +521,13 @@ class StreamingServer:
         nothing.
         """
         self._dead.discard(int(idx))
+        if self._tel_on:
+            self.telemetry.emit(
+                "chaos", "device_restore",
+                t=self.tick_count * self.cfg.tick_s,
+                tick=self.tick_count, device=int(idx),
+                healthy=len(self._healthy()))
+            self.telemetry.counters.bump("serve.device_restores")
 
     def _ladder_kwargs(self):
         cfg = self.cfg
@@ -585,6 +608,17 @@ class StreamingServer:
         st.ladder.observe(rec)
         if st.ladder.level != old:
             moves.append((st.sid, old, st.ladder.level))
+            if self._tel_on:
+                from repro.obs.ledger import rung_key as _rk
+
+                self.telemetry.emit(
+                    "ladder",
+                    "descend" if st.ladder.level > old else "recover",
+                    t=self.tick_count * self.cfg.tick_s,
+                    tick=self.tick_count, sid=st.sid, old_level=old,
+                    new_level=st.ladder.level,
+                    rung=_rk(tuple(st.ladder.rung)))
+                self.telemetry.counters.bump("serve.ladder_moves")
 
     # -- placement groups ------------------------------------------------------
 
@@ -772,8 +806,12 @@ class StreamingServer:
         return ready
 
     def _collect_shed(self):
+        # canonical sorted-sid order — the same ordering seq_audit uses,
+        # so shed records and audit rows line up row-for-row (PR 10 fix;
+        # previously both walked dict insertion order, which diverges
+        # from each other after churn re-registers a stream)
         shed = []
-        for st in self._streams.values():
+        for st in sorted(self._streams.values(), key=lambda s: s.sid):
             if st.pending_shed:
                 shed.append(ShedRecord(
                     sid=st.sid,
@@ -802,7 +840,23 @@ class StreamingServer:
                 (self.kill_device if kind == "kill"
                  else self.restore_device)(idx)
                 events.append((kind, idx))
+        if self._tel_on and events and any(
+                s.cut is None for s in self._streams.values()):
+            # the local placement group re-shards at this tick's dispatch
+            self.telemetry.emit(
+                "failover", "local_group_reshard", t=t,
+                tick=self.tick_count,
+                events=[list(e) for e in events],
+                healthy=len(self._healthy()), dead=sorted(self._dead))
         shed = self._collect_shed()
+        if self._tel_on:
+            for sr in shed:
+                self.telemetry.emit(
+                    "shed", "queue_overflow", t=t, tick=self.tick_count,
+                    sid=sr.sid, seq_lo=min(sr.seqs), seq_hi=max(sr.seqs),
+                    n=len(sr.seqs))
+                self.telemetry.counters.bump("serve.frames_shed",
+                                             len(sr.seqs))
         ready = self._gather_ready(t)
         gathered = [self._streams[rc.sid] for rc in ready]
         groups: dict = {}
@@ -816,9 +870,11 @@ class StreamingServer:
         tick_bytes = {sid: 0.0 for sid in self._streams}
         n_served = n_quiet = n_requeued = n_failed_tx = 0
         dispatched = False
+        led_obs = []                     # (sid, rung, arrivals) per delivery
         for rung, rcs in groups.items():
             dispatched = True
             cut, bits = rung
+            disp_t0 = time.perf_counter() if self._tel_on else 0.0
             # pad the request stack to a capacity-multiple bucket so both
             # the big model's (capacity, ...) batch and the scorer's see
             # tick-invariant shapes: zero chunks are motionless, score
@@ -835,6 +891,23 @@ class StreamingServer:
             dropped = set(int(i) for i in np.asarray(
                 stats["dropped_capacity_idx"]) if i >= 0)
             out_np = {k: np.asarray(v) for k, v in outputs.items()}
+            if self._tel_on:
+                from repro.obs.ledger import rung_key as _rk
+
+                # harvest funnel tel_ aux (present when the base executor
+                # is itself instrumented); out_np is already materialized
+                # host-side, so this adds no device sync
+                for k in [k for k in out_np if k.startswith("tel_")]:
+                    self.telemetry.counters.bump(
+                        "exec." + k[4:], int(out_np.pop(k).sum()))
+
+                self.telemetry.emit(
+                    "dispatch", f"group:{_rk(rung)}", t=t,
+                    dur=time.perf_counter() - disp_t0,
+                    tick=self.tick_count, n_chunks=n, bucket=b,
+                    n_served=int(served.sum()),
+                    n_capacity_dropped=len(dropped))
+                self.telemetry.counters.bump("serve.dispatches")
             for i, rc in enumerate(rcs):
                 st = self._streams[rc.sid]
                 if i in dropped:                 # re-queue, oldest first
@@ -869,6 +942,19 @@ class StreamingServer:
                     ok, on_air, att, lost, corrupt = \
                         self._transmit(inj, wire, t)
                     lat = (t - rc.arrivals[0]) + p99_link
+                    if self._tel_on:
+                        self.telemetry.emit(
+                            "link", "chunk_tx", t=t, tick=self.tick_count,
+                            sid=rc.sid, delivered=bool(ok), attempts=att,
+                            lost=lost, crc_fail=corrupt,
+                            payload_b=payload_b, on_air_b=on_air,
+                            seq_lo=rc.seqs[0], seq_hi=rc.seqs[-1],
+                            fault_id=self._chaos.fault_id(rc.sid))
+                        c = self.telemetry.counters
+                        c.bump("serve.link_attempts", att)
+                        c.bump("serve.link_lost", lost)
+                        c.bump("serve.link_crc_fail", corrupt)
+                        c.bump("serve.bytes_on_air", int(round(on_air)))
                     if st.ladder is not None:
                         self._observe_ladder(
                             st, moves, rung=rung, delivered=ok,
@@ -912,6 +998,11 @@ class StreamingServer:
                 st.deficit = max(0.0, st.deficit - float(cfg.chunk))
                 if st.cut is not None:
                     st.frames_since_resolve += rc.n_real
+                if self._tel_on:
+                    led_obs.append((rc.sid, rung, rc.arrivals))
+                    c = self.telemetry.counters
+                    c.bump("serve.frames_delivered", rc.n_real)
+                    c.bump("serve.chunks_" + kind)
                 completions.append(Completion(
                     sid=rc.sid, t=t, n_frames=rc.n_real, kind=kind,
                     result=result, wire_bytes=wire, seqs=rc.seqs))
@@ -936,6 +1027,27 @@ class StreamingServer:
                 self.queue_delay_s.extend(
                     (t + batch_s) - a for a in rc.arrivals)
         self.frames_completed += sum(c.n_frames for c in completions)
+        if self._tel_on:
+            for sid, rung, arrivals in led_obs:
+                for a in arrivals:
+                    self.telemetry.ledger.observe_latency(
+                        sid, rung, (t + batch_s) - a)
+            depths = [len(s.queue) for s in self._streams.values()]
+            self.telemetry.emit(
+                "tick", f"tick{self.tick_count}", t=t, dur=batch_s,
+                tick=self.tick_count, n_streams=len(self._streams),
+                n_ready=len(ready), n_served=n_served, n_quiet=n_quiet,
+                n_requeued=n_requeued, n_failed_tx=n_failed_tx,
+                queue_frames=int(sum(depths)),
+                queue_max=int(max(depths, default=0)),
+                deficit_max=float(max(
+                    (s.deficit for s in self._streams.values()),
+                    default=0.0)),
+                bytes_sent=float(sum(tick_bytes.values())))
+            c = self.telemetry.counters
+            c.bump("serve.ticks")
+            c.bump("serve.chunks_requeued", n_requeued)
+            c.bump("serve.tx_failures", n_failed_tx)
 
         # byte traces + congestion report
         for sid, st in self._streams.items():
@@ -951,6 +1063,12 @@ class StreamingServer:
                                    / (len(st.trace) * cfg.tick_s))
 
         resolves = self._maybe_resolve(changes)
+        if self._tel_on and resolves:
+            self.telemetry.counters.bump("serve.resolves_fired", resolves)
+            for sid, old_cut, new_cut in changes:
+                self.telemetry.emit(
+                    "dispatch", "cut_change", t=t, tick=self.tick_count,
+                    sid=sid, old_cut=str(old_cut), new_cut=str(new_cut))
         self._reap_drained()
         return TickReport(
             t=t, n_ready=len(ready), n_served=n_served, n_quiet=n_quiet,
@@ -1096,6 +1214,14 @@ class StreamingServer:
             "streams": meta,
             "controller": ctl,
         }
+        if self._tel_on:
+            # optional key: telemetry totals + ledger survive the restart
+            # (absent pre-PR-10 checkpoints restore fine — .get below)
+            extra["telemetry"] = self.telemetry.state_dict()
+            self.telemetry.emit(
+                "ckpt", "checkpoint",
+                t=self.tick_count * self.cfg.tick_s, tick=self.tick_count,
+                step=int(self.tick_count if step is None else step))
         if step is None:
             step = self.tick_count
         return save_checkpoint(ckpt_dir, step, tree, extra=extra)
@@ -1103,7 +1229,7 @@ class StreamingServer:
     @classmethod
     def restore(cls, ckpt_dir: str, base, *, link=None, controller=None,
                 config: ServeConfig = ServeConfig(), chaos=None,
-                step: int | None = None) -> "StreamingServer":
+                telemetry=None, step: int | None = None) -> "StreamingServer":
         """Rebuild a server from its newest (or ``step``'s) checkpoint.
 
         Resumes exactly where :meth:`checkpoint` left off: queued frames,
@@ -1127,7 +1253,11 @@ class StreamingServer:
                 f"unsupported server checkpoint version "
                 f"{extra.get('version')!r}")
         srv = cls(base, link=link, controller=controller, config=config,
-                  chaos=chaos)
+                  chaos=chaos, telemetry=telemetry)
+        if srv._tel_on and extra.get("telemetry"):
+            # counter totals + SLO ledger continue across the restart;
+            # the trace starts a fresh run that records its ancestry
+            srv.telemetry.load_state(extra["telemetry"])
         like = {"queues": {
             sid: {"t": np.zeros(m["qlen"], np.float64),
                   "f": np.zeros((m["qlen"], srv.h, srv.w), np.float32),
@@ -1199,7 +1329,8 @@ class StreamingServer:
         per = {}
         ok = True
         queued_total = 0
-        for sid, st in self._streams.items():
+        # canonical sorted-sid order, matching _collect_shed (PR 10 fix)
+        for sid, st in sorted(self._streams.items()):
             seqs = [e[2] for e in st.queue]
             queued_total += len(seqs)
             ascending = all(a < b for a, b in zip(seqs, seqs[1:]))

@@ -38,8 +38,14 @@ def _leaf_paths(tree):
     return out
 
 
-def save_checkpoint(ckpt_dir: str, step: int, tree, extra: dict | None = None) -> str:
-    """Atomically persist a pytree.  Returns the final directory path."""
+def save_checkpoint(ckpt_dir: str, step: int, tree, extra: dict | None = None,
+                    telemetry=None) -> str:
+    """Atomically persist a pytree.  Returns the final directory path.
+
+    ``telemetry=`` (a ``repro.obs.Telemetry``) charges the save to the
+    §15 counters (``ckpt.saves`` / ``ckpt.bytes_written``) and emits a
+    ``ckpt`` trace event — accounting only, no behavioral change.
+    """
     final = os.path.join(ckpt_dir, f"step_{step:08d}")
     tmp = final + ".tmp"
     if os.path.exists(tmp):
@@ -48,10 +54,12 @@ def save_checkpoint(ckpt_dir: str, step: int, tree, extra: dict | None = None) -
 
     manifest = {"step": step, "leaves": [], "extra": extra or {},
                 "time": time.time()}
+    nbytes = 0
     for name, leaf in _leaf_paths(tree):
         arr = np.asarray(jax.device_get(leaf))
         fname = name.replace("/", "__") + ".npy"
         np.save(os.path.join(tmp, fname), arr)
+        nbytes += int(arr.nbytes)
         manifest["leaves"].append(
             {"name": name, "file": fname, "shape": list(arr.shape),
              "dtype": str(arr.dtype)})
@@ -62,6 +70,11 @@ def save_checkpoint(ckpt_dir: str, step: int, tree, extra: dict | None = None) -
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)
+    if telemetry is not None and getattr(telemetry, "enabled", False):
+        telemetry.counters.bump("ckpt.saves")
+        telemetry.counters.bump("ckpt.bytes_written", nbytes)
+        telemetry.emit("ckpt", "save", step=step,
+                       n_leaves=len(manifest["leaves"]), bytes=nbytes)
     return final
 
 
@@ -91,12 +104,15 @@ def read_extra(ckpt_dir: str, step: int) -> dict:
         return json.load(f)["extra"]
 
 
-def restore_checkpoint(ckpt_dir: str, step: int, like_tree, shardings=None):
+def restore_checkpoint(ckpt_dir: str, step: int, like_tree, shardings=None,
+                       telemetry=None):
     """Restore into the structure of ``like_tree``.
 
     ``shardings``: optional matching pytree of NamedShardings for the
     *current* mesh — this is the elastic-rescale path (leaves are re-placed
     shard-by-shard on whatever mesh is alive now).
+    ``telemetry=`` charges the restore to ``ckpt.restores`` and emits a
+    ``ckpt`` trace event (accounting only).
     """
     d = os.path.join(ckpt_dir, f"step_{step:08d}")
     with open(os.path.join(d, "manifest.json")) as f:
@@ -120,6 +136,9 @@ def restore_checkpoint(ckpt_dir: str, step: int, like_tree, shardings=None):
             out.append(jax.device_put(arr, shard_flat[i]))
         else:
             out.append(jax.device_put(arr.astype(leaf.dtype)))
+    if telemetry is not None and getattr(telemetry, "enabled", False):
+        telemetry.counters.bump("ckpt.restores")
+        telemetry.emit("ckpt", "restore_tree", step=step, n_leaves=len(out))
     return jax.tree_util.tree_unflatten(treedef, out), manifest["extra"]
 
 

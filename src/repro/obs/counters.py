@@ -1,0 +1,157 @@
+"""Jit-safe counters: in-graph ``tel_`` aux outputs + a host-side panel.
+
+The telemetry plane's hot-path contract (DESIGN.md §15):
+
+* **In-graph counters are static-shape scalar aux outputs.** A stage
+  closure that wants to count something emits a ``tel_``-prefixed
+  int32/uint32 scalar alongside its real outputs.  The counter is part
+  of the same jit dispatch — no extra dispatch, no host callback.
+* **Zero host syncs on the hot path.**  ``CounterPanel.add`` keeps the
+  running total as a lazy device expression; nothing calls ``int()``
+  (which would block on the device) until ``totals()`` at export time.
+* **Disabled ⇒ bit-identical.**  Instrumented call sites gate aux
+  emission on construction-time flags, so a disabled executor traces
+  the *same jaxpr* as an uninstrumented one and returns bit-identical
+  outputs.
+
+``TELEMETRY_AUX`` is the declaration registry the static analyzer's
+ObsPass (O001–O003) checks registered executor targets against: every
+analyzer target must map to a declaration here, and every declared
+counter must be int32/uint32.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+TEL_PREFIX = "tel_"
+ALLOWED_DTYPES = ("int32", "uint32")
+
+# Analyzer-facing declarations: target stem -> ((counter, dtype), ...).
+# Stems are analyzer target names with the "[...]" parameterization
+# stripped (see ``telemetry_decl``).  An empty tuple is a valid
+# declaration: "this target intentionally emits no in-graph counters"
+# (pure-compute kernels whose accounting happens at the session layer).
+TELEMETRY_AUX: Dict[str, Tuple[Tuple[str, str], ...]] = {
+    "face_auth.funnel": (
+        ("windows", "int32"), ("auth", "int32"),
+        ("motion_dropped", "int32"), ("cascade_dropped", "int32"),
+    ),
+    "vr_rig.depth": (("pairs", "int32"),),
+    "vr_rig.panorama": (("views", "int32"),),
+    # the offload halves emit no tel_ aux: their bytes accounting IS the
+    # charged first-class ``wire_b`` output, and per-attempt counters
+    # (retries, crc failures) live at the OffloadSession host layer —
+    # telemetry must never ride the WirePayload uncharged (O002)
+    "fa_offload.node": (),
+    "fa_offload.cloud": (),
+    "vr_offload.node": (),
+    "vr_offload.cloud": (),
+    # batch_step vmaps the instrumented funnel, inheriting its aux
+    "serve.batch_step": (
+        ("windows", "int32"), ("auth", "int32"),
+        ("motion_dropped", "int32"), ("cascade_dropped", "int32"),
+    ),
+    "serve.group_step": (),
+    "serve.group_step_degraded": (),
+    "serve.restore_rescore": (),
+    "serve.cascade_admit": (),
+    "quant.nn_forward": (),
+    "codec.roundtrip": (),
+}
+
+
+def telemetry_decl(target_name: str):
+    """Resolve an analyzer target name to its TELEMETRY_AUX declaration.
+
+    ``fa_offload[nn,8].node`` -> ``fa_offload.node``;
+    ``serve.batch_step[3x4]`` -> ``serve.batch_step``;
+    ``face_auth.funnel`` -> itself.  Returns None when undeclared
+    (an O001 finding), a (possibly empty) tuple otherwise.
+    """
+    stem = target_name.split("[", 1)[0]
+    if "]." in target_name:
+        stem = stem + "." + target_name.rsplit("].", 1)[1]
+    return TELEMETRY_AUX.get(stem)
+
+
+def graph_counter(value, dtype: str = "int32"):
+    """Cast ``value`` to a scalar telemetry counter inside a jitted fn.
+
+    Only int32/uint32 are legal counter dtypes (analyzer O003): wide
+    enough for per-dispatch tallies, and identical across backends so
+    telemetry never perturbs dispatch caching.
+    """
+    if dtype not in ALLOWED_DTYPES:
+        raise ValueError(
+            f"telemetry counter dtype must be one of {ALLOWED_DTYPES}, "
+            f"got {dtype!r}")
+    import jax.numpy as jnp
+
+    return jnp.asarray(value).astype(dtype).reshape(())
+
+
+def graph_counters(_dtypes: Optional[Dict[str, str]] = None, **values):
+    """Build a ``{tel_name: scalar}`` aux dict inside a jitted fn."""
+    dtypes = _dtypes or {}
+    return {TEL_PREFIX + name: graph_counter(v, dtypes.get(name, "int32"))
+            for name, v in values.items()}
+
+
+class CounterPanel:
+    """Host-side accumulator for counters (device-lazy + plain ints).
+
+    ``add`` folds device scalars into a lazy running sum (async
+    dispatch, never blocks); ``bump`` adds host integers.  ``totals``
+    is the only method that materializes device values.
+    """
+
+    def __init__(self, enabled: bool = True):
+        self.enabled = bool(enabled)
+        self._dev: Dict[str, object] = {}
+        self._host: Dict[str, int] = {}
+
+    def bump(self, name: str, n: int = 1) -> None:
+        if not self.enabled:
+            return
+        self._host[name] = self._host.get(name, 0) + int(n)
+
+    def add(self, name: str, value) -> None:
+        """Accumulate a device scalar without a host sync."""
+        if not self.enabled:
+            return
+        cur = self._dev.get(name)
+        self._dev[name] = value if cur is None else cur + value
+
+    def consume(self, out: dict, prefix: str = "") -> dict:
+        """Pop ``tel_*`` keys out of a dispatch result dict into the
+        panel (device-lazy), returning the cleaned dict."""
+        if not any(k.startswith(TEL_PREFIX) for k in out):
+            return out
+        clean = {}
+        for k, v in out.items():
+            if k.startswith(TEL_PREFIX):
+                if self.enabled:
+                    self.add(prefix + k[len(TEL_PREFIX):], v)
+            else:
+                clean[k] = v
+        return clean
+
+    def totals(self) -> Dict[str, int]:
+        """Materialize every counter to a plain int (the one sync
+        point — call at export/report time, never per tick)."""
+        out = dict(self._host)
+        for name, v in self._dev.items():
+            out[name] = out.get(name, 0) + int(v)
+        return dict(sorted(out.items()))
+
+    def state_dict(self) -> Dict[str, int]:
+        return self.totals()
+
+    def load_state(self, state: Dict[str, int]) -> None:
+        self._dev = {}
+        self._host = {str(k): int(v) for k, v in (state or {}).items()}
+
+    def merge(self, other: "CounterPanel") -> None:
+        for name, v in other.totals().items():
+            self.bump(name, v)

@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.analysis.passes import (
-    CutPass, DispatchPass, KernelPass, PassContext, PrecisionPass)
+    CutPass, DispatchPass, KernelPass, ObsPass, PassContext, PrecisionPass)
 from repro.analysis.report import AnalysisReport, Baseline, Finding, PassResult
 from repro.analysis.spec import (
     DivCheck, FnPair, KernelAnalysisSpec, KernelPlan, Tile, adapt_block,
@@ -373,6 +373,95 @@ class TestCutPass:
 
 
 # ---------------------------------------------------------------------------
+# obs family (telemetry-plane contracts, DESIGN.md §15)
+# ---------------------------------------------------------------------------
+
+
+class TestObsPass:
+    def test_undeclared_target_flagged_declared_quiet(self):
+        from repro.analysis.registry import ExecutorTarget
+
+        rogue = ExecutorTarget("rogue.target", lambda x: x + 1,
+                               (jnp.zeros((2,)),))
+        known = ExecutorTarget("face_auth.funnel", lambda x: x + 1,
+                               (jnp.zeros((2,)),))
+        ctx = PassContext(targets=[rogue, known], cut_families=[],
+                          kernel_specs=[], kernel_missing=[],
+                          kernel_shapes={})
+        res = ObsPass().run(ctx)
+        hits = [f for f in res.findings if f.code == "O001"]
+        assert [f.subject for f in hits] == ["rogue.target"]
+
+    def test_parameterized_names_resolve_to_stems(self):
+        """fa_offload[nn,8].node-style names must hit fa_offload.node."""
+        from repro.analysis.registry import ExecutorTarget
+
+        named = [ExecutorTarget(n, lambda x: x, (jnp.zeros((2,)),))
+                 for n in ("fa_offload[nn,8].node", "vr_offload[depth,raw]"
+                           ".cloud", "serve.batch_step[3x4]",
+                           "codec.roundtrip[b8]")]
+        ctx = PassContext(targets=named, cut_families=[], kernel_specs=[],
+                          kernel_missing=[], kernel_shapes={})
+        res = ObsPass().run(ctx)
+        assert "O001" not in _codes(res.findings)
+
+    def test_telemetry_in_payload_flagged(self):
+        """Single violation: a node half that smuggles a tel_ counter
+        into the WirePayload (uncharged sideband bytes — O002)."""
+        class Exec:
+            CUTS = ("a",)
+            PAYLOAD_SCHEMA = {"a": PayloadSchema(i32=("n",))}
+
+            def _node_fn(self, x):
+                return ({"n": jnp.zeros((), jnp.int32),
+                         "tel_windows": jnp.zeros((), jnp.int32)}, 0.0)
+
+        res = ObsPass().run(_cut_ctx(Exec, ("a",)))
+        hits = [f for f in res.findings if f.code == "O002"]
+        assert hits and all(f.where == "tel_windows" for f in hits)
+
+    def test_telemetry_in_schema_flagged(self):
+        """A PayloadSchema that ADMITS a tel_ field is just as wrong as a
+        node half that emits one."""
+        class Exec:
+            CUTS = ("a",)
+            PAYLOAD_SCHEMA = {"a": PayloadSchema(i32=("n", "tel_auth"))}
+
+            def _node_fn(self, x):
+                return ({"n": jnp.zeros((), jnp.int32)}, 0.0)
+
+        res = ObsPass().run(_cut_ctx(Exec, ("a",)))
+        hits = [f for f in res.findings if f.code == "O002"]
+        assert "tel_auth" in {f.where for f in hits}
+
+    def test_bad_counter_dtype_flagged(self, monkeypatch):
+        from repro.analysis.registry import ExecutorTarget
+        from repro.obs import counters as obs_counters
+
+        monkeypatch.setitem(obs_counters.TELEMETRY_AUX, "synth.widectr",
+                            (("frames", "int64"),))
+        tgt = ExecutorTarget("synth.widectr", lambda x: x,
+                             (jnp.zeros((2,)),))
+        ctx = PassContext(targets=[tgt], cut_families=[], kernel_specs=[],
+                          kernel_missing=[], kernel_shapes={})
+        res = ObsPass().run(ctx)
+        hits = [f for f in res.findings if f.code == "O003"]
+        assert [f.where for f in hits] == ["frames"]
+
+    def test_clean_family_quiet(self):
+        class Exec:
+            CUTS = ("a",)
+            PAYLOAD_SCHEMA = {"a": PayloadSchema(i32=("n",))}
+
+            def _node_fn(self, x):
+                return ({"n": jnp.zeros((), jnp.int32)}, 0.0)
+
+        res = ObsPass().run(_cut_ctx(Exec, ("a",)))
+        assert res.findings == []
+        assert "synth_fam[a]" in res.subjects
+
+
+# ---------------------------------------------------------------------------
 # report / baseline mechanics
 # ---------------------------------------------------------------------------
 
@@ -479,3 +568,9 @@ class TestRepoGate:
                      "serve.group_step_degraded[vj,4]",
                      "serve.restore_rescore"):
             assert must in dispatch_subjects
+        # §15 gate: every dispatch target is also obs-audited (O001 needs
+        # full coverage to mean anything), plus one subject per offload cut
+        assert set(subs["dispatch"]) <= set(subs["obs"])
+        obs_subjects = " ".join(subs["obs"])
+        assert "face_auth[nn]" in obs_subjects
+        assert "vr_video[stitch]" in obs_subjects

@@ -35,6 +35,30 @@ def test_benchmark_smoke_all_sections():
             data = json.load(open(path))
             assert data["section"] == name
             assert data["rows"], f"section {name} emitted no rows"
+            # every section shares ONE top-level schema (bench.v1 via
+            # bench_record) so BENCH files are machine-diffable
+            assert data["schema"] == "bench.v1", f"{name}: {data.keys()}"
+            assert data["smoke"] is True
+            assert isinstance(data["wall_s"], float)
+            assert isinstance(data["generated_at"], float)
+            assert all(len(r) == 4 for r in data["rows"]), \
+                f"section {name} broke the (tag, metric, value, note) " \
+                "row layout"
+        # bench-diff tooling: a file diffed against itself is identical
+        # (exit 0) and against a different section is not (exit 1)
+        diff = subprocess.run(
+            [sys.executable, "-m", "repro.obs", "diff",
+             os.path.join(td, "BENCH_fa.json"),
+             os.path.join(td, "BENCH_fa.json")],
+            capture_output=True, text=True, env=env, cwd=REPO, timeout=60)
+        assert diff.returncode == 0, diff.stdout + diff.stderr
+        assert "identical" in diff.stdout
+        diff2 = subprocess.run(
+            [sys.executable, "-m", "repro.obs", "diff",
+             os.path.join(td, "BENCH_fa.json"),
+             os.path.join(td, "BENCH_vr.json")],
+            capture_output=True, text=True, env=env, cwd=REPO, timeout=60)
+        assert diff2.returncode == 1, diff2.stdout + diff2.stderr
         fa = json.load(open(os.path.join(td, "BENCH_fa_hotpath.json")))
         parity = {r[1]: r[2] for r in fa["rows"]}
         assert parity.get("funnel_count_parity") == "identical"
@@ -77,6 +101,14 @@ def test_benchmark_smoke_all_sections():
         gap, gnote = crow["starvation_gap"]
         assert int(gap) <= int(gnote.split("ladder_depth=")[1].split(" ")[0])
         assert int(crow["overload_shed_frames"][0]) > 0
+        # §15 telemetry plane: the recorded chaos drive proves the kill
+        # chain from its exported JSONL alone, the Perfetto export is
+        # well-formed, and the counter panel saw the fleet
+        assert crow["trace_kill_chain"][0] == "1", crow["trace_kill_chain"]
+        assert crow["trace_perfetto_export"][0] == "1"
+        assert int(crow["telemetry_counters"][0]) > 0
+        res_led = {r[1]: r[2] for r in res["rows"]}
+        assert res_led["ledger_flip_match"] == "1"
         ana = json.load(open(os.path.join(td, "BENCH_analysis.json")))
         arow = {r[1]: r[2] for r in ana["rows"]}
         assert arow["non_baselined"] == "0"
